@@ -1,0 +1,48 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = 0 for modeled
+or dimensionless rows).  An optional LM-roofline summary is appended when
+dry-run artifacts exist under experiments/dryrun/.
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks import fig4_throughput, fig5_6_energy, tab1_2_resources
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def lm_roofline_summary(emit):
+    files = sorted(glob.glob("experiments/dryrun/*.json"))
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            emit(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                 r.get("status", "?"))
+            continue
+        t = r["roofline"].get("terms_primary",
+                              r["roofline"]["terms_corrected"])
+        emit(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+             f"dom={t['dominant']} compute={t['compute_s']:.3e}s "
+             f"memory={t['memory_s']:.3e}s coll={t['collective_s']:.3e}s "
+             f"mem/dev={r['memory']['per_device_total']/2**30:.2f}GiB")
+
+
+def main() -> None:
+    emit("bench/header", 0.0, "name,us_per_call,derived")
+    fig4_throughput.run(emit)
+    fig5_6_energy.run(emit)
+    tab1_2_resources.run(emit)
+    if glob.glob("experiments/dryrun/*.json"):
+        lm_roofline_summary(emit)
+
+
+if __name__ == "__main__":
+    main()

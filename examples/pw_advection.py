@@ -1,0 +1,63 @@
+"""PW advection solver (paper benchmark 1): a real time-stepping run.
+
+    PYTHONPATH=src python examples/pw_advection.py --size 8M --steps 5
+
+Integrates the MONC Piacsek-Williams advection source terms over several
+steps (forward Euler on the wind fields), using the generated Pallas
+dataflow kernels, and reports MPt/s per application.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps import pw_advection
+from repro.core import compile_program
+
+SIZES = {"1M": (128, 64, 128), "8M": (256, 256, 128), "32M": (512, 256, 256)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="1M", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "jnp_fused", "jnp_naive"])
+    args = ap.parse_args()
+
+    grid = SIZES[args.size]
+    p = pw_advection()
+    ex = compile_program(p, grid, backend=args.backend)
+    print("plan:", ex.plan.describe())
+
+    rng = np.random.default_rng(0)
+    fields = {f: jnp.asarray(rng.normal(size=grid).astype(np.float32) * 0.1)
+              for f in ("u", "v", "w")}
+    scalars = {"tcx": jnp.float32(0.05), "tcy": jnp.float32(0.05)}
+    coeffs = {c: jnp.asarray(np.linspace(0.9, 1.1, grid[2]).astype(np.float32))
+              for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+    dt = 0.1
+    pts = float(np.prod(grid))
+
+    for step in range(args.steps):
+        t0 = time.perf_counter()
+        src = ex(fields, scalars, coeffs)
+        fields = {
+            "u": fields["u"] + dt * src["su"],
+            "v": fields["v"] + dt * src["sv"],
+            "w": fields["w"] + dt * src["sw"],
+        }
+        jax.block_until_ready(fields["u"])
+        el = time.perf_counter() - t0
+        umax = float(jnp.abs(fields["u"]).max())
+        print(f"step {step}: {el*1e3:8.1f} ms  {pts/el/1e6:8.2f} MPt/s  "
+              f"|u|max={umax:.4f}")
+    assert np.isfinite(umax)
+    print("pw_advection OK")
+
+
+if __name__ == "__main__":
+    main()

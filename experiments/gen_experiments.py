@@ -1,0 +1,157 @@
+"""Regenerate EXPERIMENTS.md from dry-run JSONs + hand-written sections.
+
+    PYTHONPATH=src python experiments/gen_experiments.py
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun), the
+hand-maintained §Perf log (experiments/perf_log.md) and §Paper-claims
+(experiments/paper_claims.md), and emits EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+
+PREAMBLE = """# EXPERIMENTS
+
+All artifacts are reproducible from this repo:
+
+* dry-run matrix: `PYTHONPATH=src python -m repro.launch.dryrun --all --pods both`
+* benchmarks:     `PYTHONPATH=src python -m benchmarks.run`
+* tests:          `PYTHONPATH=src pytest tests/`
+* this file:      `PYTHONPATH=src python experiments/gen_experiments.py`
+
+## Method — roofline terms (§Roofline columns)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+
+* **compute_s** = MODEL_FLOPS / (chips x peak).  MODEL_FLOPS = 6·N·D dense /
+  6·N_active·D MoE per trained token (+ quadratic/windowed attention term),
+  2·N per inference token — the standard MFU basis, exact by construction.
+* **memory_s** = analytic HBM traffic per device / HBM_bw (params passes +
+  activation r/w passes + remat recompute + KV-cache traffic + logits; the
+  model is in `repro.analysis.roofline.analytic_traffic` with each term
+  documented there).
+* **collective_s** = max(HLO wire bytes, analytic wire bytes) / link_bw.
+  HLO wire bytes come from parsing every all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute in `compiled.as_text()`
+  (result shapes x ring factors x replica-group size), with while-body
+  collectives multiplied by their trip counts.
+
+**Scan caveat (measured on this container):** XLA `cost_analysis()` counts a
+`while` (scan) body ONCE — an 8-step scanned matmul reports 1/8 the FLOPs of
+its unrolled twin.  Train steps scan over layers and grad-accumulation
+microbatches, so raw HLO flops/bytes columns carry a documented correction
+factor; analytic columns are exact.  `useful_ratio` = MODEL_FLOPS /
+(corrected HLO FLOPs x chips): <1 flags redundant compute (replication,
+remat, capacity padding), >1 flags residual undercount from *inner*
+sequence-chunk scans (flash KV loop, SSM chunk scan) that the correction
+does not reach.
+
+Roofline fraction (the §Perf score) = compute_s / max(compute_s, memory_s,
+collective_s): the fraction of the dominant-term-limited step time doing
+useful math.  `mem/dev` is `compiled.memory_analysis()` (args + temps +
+outputs - aliased), the capacity proof for deliverable (e).
+"""
+
+
+def fmt_cell(r):
+    t = r["roofline"].get("terms_primary", r["roofline"]["terms_corrected"])
+    peak = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    frac = t["compute_s"] / peak if peak else 0.0
+    mem = r["memory"]["per_device_total"] / 2**30
+    fits = "yes" if mem <= 16.0 else "NO"
+    ur = r["roofline"].get("useful_flops_ratio", float("nan"))
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('microbatches', 1)} | {mem:.2f} | {fits} | "
+            f"{t['compute_s']:.2e} | {t['memory_s']:.2e} | "
+            f"{t['collective_s']:.2e} | {t['dominant']} | {frac:.3f} | "
+            f"{ur:.2f} |")
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(f))
+        if r.get("variant", "baseline") != "baseline":
+            continue
+        recs.append(r)
+
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"].startswith("skip")]
+    failed = [r for r in recs if r["status"].startswith("FAIL")]
+
+    lines = [PREAMBLE]
+    lines.append("\n## §Dry-run — lower+compile status "
+                 f"({len(ok)} ok / {len(skipped)} skipped by design / "
+                 f"{len(failed)} failed)\n")
+    lines.append("Every (arch x shape) cell lowered and compiled with "
+                 "`jax.jit(step, in_shardings=...).lower().compile()` on the "
+                 "single-pod (16,16)=256-chip and multi-pod (2,16,16)="
+                 "512-chip meshes.  `mb` = auto-chosen gradient-accumulation "
+                 "factor; `fits` compares per-device bytes to 16 GiB HBM.\n")
+    lines.append("Skipped by design (no artifacts written): `long_500k` on "
+                 "the pure full-attention archs — grok-1-314b, "
+                 "nemotron-4-340b, chameleon-34b, whisper-small — per the "
+                 "brief (sub-quadratic attention required); run for the "
+                 "SWA/local/SSM/hybrid archs.  Whisper has a decoder, so its "
+                 "decode_32k cell runs (enc-dec, not encoder-only).  "
+                 "40 cells − 4 skips = 36 runnable × 2 meshes = 72 "
+                 "artifacts.\n")
+    if failed:
+        lines.append("### FAILURES\n")
+        for r in failed:
+            lines.append(f"* {r['arch']} {r['shape']} {r['mesh']}: "
+                         f"{r['status']}")
+
+    lines.append("\n## §Roofline — per (arch x shape x mesh), baseline rules\n")
+    lines.append("| arch | shape | mesh | mb | mem/dev GiB | fits | "
+                 "compute_s | memory_s | collective_s | dominant | "
+                 "roofline-frac | useful_ratio |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for r in sorted(ok, key=lambda r: (r["arch"], order[r["shape"]],
+                                       r["mesh"])):
+        lines.append(fmt_cell(r))
+
+    lines.append("""
+### Reading the table
+
+* one sentence per cell would be noise; the patterns:
+  * **train cells** are compute- or collective-dominated: TP=16 over the
+    `model` axis is oversized for the <10B archs — their activations·(g-1)/g
+    all-reduce traffic rivals or beats compute (the §Perf cells attack this).
+  * **decode cells** are collective-dominated at baseline: GQA KV heads
+    (8, 5, 4, 1) do not divide tp=16, the fallback head-dim sharding makes
+    every attention contraction a sharded-reduction -> per-token all-reduces
+    of (B, H, ctx) logits.  Fixed by kv-length sharding in §Perf.
+  * **prefill cells** sit closest to the compute roofline (big matmuls,
+    windowed attention) — mem/dev is the constraint to watch.
+  * **moving a term down** (per-cell note): train -> drop TP for <10B archs
+    (dp_remap) or Megatron-SP; decode -> kvseq length sharding; memory ->
+    microbatching (already auto) and smaller flash chunks.
+* nemotron-4-340b train does NOT fit 256 chips (params+opt f32 = 4.1 TB vs
+  4 TB pod HBM): the multi-pod column is the minimum viable footprint; this
+  is a capacity conclusion, not a bug.
+""")
+
+    perf = os.path.join(HERE, "perf_log.md")
+    if os.path.exists(perf):
+        lines.append(open(perf).read())
+    claims = os.path.join(HERE, "paper_claims.md")
+    if os.path.exists(claims):
+        lines.append(open(claims).read())
+
+    out = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {out}: {len(ok)} ok, {len(skipped)} skipped, "
+          f"{len(failed)} failed")
+
+
+if __name__ == "__main__":
+    main()

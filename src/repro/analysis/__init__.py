@@ -1,0 +1,2 @@
+from .roofline import (parse_collectives, roofline_report, analytic_flops,
+                       RooflineTerms)

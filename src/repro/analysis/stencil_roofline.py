@@ -1,0 +1,84 @@
+"""Modeled TPU performance for stencil programs (paper Fig. 4 analogue).
+
+The FPGA paper's II=1 design is *streaming-bandwidth limited*: one result
+per cycle with every input element fetched exactly once.  The TPU dataflow
+backend has the same property (windows fetch each element once per fuse
+group), so the model is:
+
+    time/pt = max( bytes_per_point / HBM_bw,  flops_per_point / VPU_f32 )
+    MPt/s   = 1e-6 / time_per_point    (per chip; x chips when distributed)
+
+bytes_per_point per backend:
+  * pallas (dataflow) — each group input read once, each group output
+    written once (+halo fraction, negligible at production block sizes)
+  * jnp_fused (DaCe role)   — inputs re-read per consuming op after XLA
+    fusion boundaries: approximated as one read per field per op-cluster
+  * jnp_naive (Vitis -O0 role) — one read per stencil ACCESS, one write per
+    op (no reuse at all)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .. import hw
+from ..core.ir import Program
+from ..core.passes import infer_halo, live_ops, stage_split
+
+# v5e vector unit f32 throughput (8x128 lanes x FMA x ~0.94 GHz) — estimate
+VPU_F32_FLOPS = 7.5e12
+
+
+@dataclasses.dataclass
+class StencilModel:
+    flops_per_point: float
+    bytes_per_point: dict      # backend -> bytes
+    mpts_chip: dict            # backend -> modeled MPt/s on one chip
+
+    def mpts(self, backend: str, chips: int = 1) -> float:
+        return self.mpts_chip[backend] * chips
+
+
+def model_program(p: Program, dtype_bytes: int = 4) -> StencilModel:
+    fl = p.flops_per_point()
+    alive = live_ops(p)
+    groups = stage_split(p, "auto")
+
+    # dataflow: per group, each external input read once + outputs written
+    reads = 0
+    writes = 0
+    for g in groups:
+        gh = infer_halo(p, g)
+        reads += len(gh.group_inputs) + len(gh.group_coeffs) * 0  # coeffs tiny
+        writes += len(gh.group_outputs)
+    dataflow_b = (reads + writes) * dtype_bytes
+
+    # naive: one read per access, one write per op
+    accesses = sum(len(p.ops[i].accesses()) for i in alive)
+    naive_b = (accesses + len(alive)) * dtype_bytes
+
+    # fused jnp: XLA fuses elementwise chains but rematerialises between
+    # reduction/reshape boundaries; empirical middle ground — one read per
+    # distinct field per op + one write per op
+    fused_reads = sum(len({a.field for a in p.ops[i].accesses()})
+                      for i in alive)
+    fused_b = (fused_reads + len(alive)) * dtype_bytes
+
+    bytes_pp = {"pallas": dataflow_b, "jnp_fused": fused_b,
+                "jnp_naive": naive_b}
+    mpts = {}
+    for k, b in bytes_pp.items():
+        t_mem = b / hw.TPU_V5E.hbm_bandwidth
+        t_cmp = fl / VPU_F32_FLOPS
+        mpts[k] = 1e-6 / max(t_mem, t_cmp)
+    return StencilModel(flops_per_point=fl, bytes_per_point=bytes_pp,
+                        mpts_chip=mpts)
+
+
+def modeled_energy_j(points: float, mpts: float,
+                     watts: float = hw.TPU_V5E.busy_watts) -> float:
+    """Paper Fig. 5/6 analogue: energy = execution time x busy power."""
+    seconds = points / (mpts * 1e6)
+    return seconds * watts

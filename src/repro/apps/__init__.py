@@ -1,0 +1,1 @@
+from .advection import pw_advection, tracer_advection  # noqa: F401

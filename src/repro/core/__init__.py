@@ -1,0 +1,8 @@
+# Stencil-HMLS core: stencil IR (dialect analogue), dataflow plan (HLS-
+# dialect analogue), jnp/Pallas backends, distributed executor.
+from .frontend import (CoeffHandle, ExprHandle, FieldHandle, ProgramBuilder,
+                       absolute, exp, log, maximum, minimum, sign, sqrt,
+                       tanh, where)
+from .ir import Program
+from .pipeline import CompiledStencil, compile_program, run_time_loop
+from .schedule import DataflowPlan, auto_plan

@@ -1,0 +1,81 @@
+"""Shared expression-tree evaluator.
+
+Both backends (full-array jnp and in-kernel Pallas) evaluate the same IR by
+supplying an *access resolver*; hash-consing of the frozen Expr nodes gives
+CSE for free via the memo table (tracer advection's 24 ops share many
+subtrees).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+from .ir import (Access, BinOp, BinOpKind, Cmp, CmpKind, CoeffRef, Const,
+                 Expr, ScalarRef, Select, UnOp, UnOpKind)
+
+_BIN = {
+    BinOpKind.ADD: lambda a, b: a + b,
+    BinOpKind.SUB: lambda a, b: a - b,
+    BinOpKind.MUL: lambda a, b: a * b,
+    BinOpKind.DIV: lambda a, b: a / b,
+    BinOpKind.POW: lambda a, b: a ** b,
+    BinOpKind.MIN: jnp.minimum,
+    BinOpKind.MAX: jnp.maximum,
+}
+_UN = {
+    UnOpKind.NEG: lambda a: -a,
+    UnOpKind.ABS: jnp.abs,
+    UnOpKind.SQRT: jnp.sqrt,
+    UnOpKind.EXP: jnp.exp,
+    UnOpKind.LOG: jnp.log,
+    UnOpKind.TANH: jnp.tanh,
+    UnOpKind.SQUARE: jnp.square,
+    UnOpKind.SIGN: jnp.sign,
+}
+_CMP = {
+    CmpKind.LT: lambda a, b: a < b,
+    CmpKind.LE: lambda a, b: a <= b,
+    CmpKind.GT: lambda a, b: a > b,
+    CmpKind.GE: lambda a, b: a >= b,
+    CmpKind.EQ: lambda a, b: a == b,
+}
+
+
+def evaluate(expr: Expr, access: Callable[[Access], jnp.ndarray],
+             scalar: Callable[[str], jnp.ndarray], memo: dict | None = None,
+             coeff: Callable[[CoeffRef], jnp.ndarray] | None = None):
+    """Evaluate ``expr``; ``access`` resolves Access nodes, ``scalar`` names,
+    ``coeff`` CoeffRef nodes (broadcastable 1-D coefficient reads)."""
+    if memo is None:
+        memo = {}
+
+    def rec(e: Expr):
+        hit = memo.get(e)
+        if hit is not None:
+            return hit
+        if isinstance(e, Const):
+            r = e.value
+        elif isinstance(e, ScalarRef):
+            r = scalar(e.name)
+        elif isinstance(e, CoeffRef):
+            if coeff is None:
+                raise ValueError("program uses coefficients but no resolver given")
+            r = coeff(e)
+        elif isinstance(e, Access):
+            r = access(e)
+        elif isinstance(e, BinOp):
+            r = _BIN[e.kind](rec(e.lhs), rec(e.rhs))
+        elif isinstance(e, UnOp):
+            r = _UN[e.kind](rec(e.operand))
+        elif isinstance(e, Cmp):
+            r = _CMP[e.kind](rec(e.lhs), rec(e.rhs))
+        elif isinstance(e, Select):
+            r = jnp.where(rec(e.pred), rec(e.on_true), rec(e.on_false))
+        else:
+            raise TypeError(type(e))
+        memo[e] = r
+        return r
+
+    return rec(expr)

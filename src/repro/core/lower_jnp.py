@@ -1,0 +1,76 @@
+"""jnp backends — the Von-Neumann reference lowerings.
+
+Two variants, playing the roles of the paper's baselines:
+
+* ``naive`` — each op traverses full arrays independently, every access is a
+  fresh zero-padded shift (the role of unoptimised Vitis HLS / -O0: correct
+  by construction, no reuse structure).
+* ``fused`` — ops evaluated with one shared memo across the whole program,
+  so repeated subtrees and repeated accesses evaluate once and XLA fuses the
+  elementwise graph (the role DaCe plays in the paper: an optimising but
+  non-stencil-specialised pipeline).
+
+Both are also the *oracles* against which the Pallas backend is verified.
+SSA discipline (every field written exactly once, enforced by the builder)
+makes the shared memo sound: an Access never goes stale.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from .expr_eval import evaluate
+from .ir import Access, FieldRole, Program
+
+
+def shifted(x: jnp.ndarray, offset, pad_value: float = 0.0) -> jnp.ndarray:
+    """out[i] = x[i + offset], reading 0 outside the domain."""
+    h = int(max(abs(int(o)) for o in offset)) if len(offset) else 0
+    if h == 0 and all(int(o) == 0 for o in offset):
+        return x
+    xp = jnp.pad(x, h, constant_values=pad_value)
+    idx = tuple(slice(h + int(offset[ax]), h + int(offset[ax]) + x.shape[ax])
+                for ax in range(x.ndim))
+    return xp[idx]
+
+
+def lower(p: Program, mode: str = "fused"):
+    """Return fn(fields, scalars) -> dict of output arrays."""
+    if mode not in ("naive", "fused"):
+        raise ValueError(mode)
+
+    def run(fields: Mapping[str, jnp.ndarray],
+            scalars: Mapping[str, jnp.ndarray] | None = None,
+            coeffs: Mapping[str, jnp.ndarray] | None = None):
+        scalars = scalars or {}
+        coeffs = coeffs or {}
+        env = dict(fields)
+        outputs = {}
+        shared_memo: dict = {}
+        any_field = next(iter(fields.values()))
+
+        def coeff(c):
+            ax = p.coeffs[c.coeff]
+            v = shifted(coeffs[c.coeff], (c.offset,))
+            shape = [1] * p.ndim
+            shape[ax] = v.shape[0]
+            return v.reshape(shape)
+
+        for op in p.ops:
+            memo = shared_memo if mode == "fused" else {}
+
+            def access(a: Access):
+                return shifted(env[a.field], a.offset)
+
+            res = evaluate(op.expr, access, lambda n: scalars[n], memo,
+                           coeff=coeff)
+            res = jnp.broadcast_to(res, any_field.shape)
+            env[op.out] = res
+            if p.fields[op.out].role == FieldRole.OUTPUT:
+                outputs[op.out] = res
+        return outputs
+
+    return run

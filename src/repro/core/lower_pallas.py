@@ -1,0 +1,59 @@
+"""Pallas backend orchestrator: Program + DataflowPlan -> executable.
+
+Runs the plan's fuse groups in order.  Fields crossing a group boundary are
+materialised in HBM — the TPU equivalent of the paper's inter-stage streams —
+and re-padded for the consuming group's windows.  Inside a group everything
+flows through the generated kernel's VMEM windows (see kernels/stencil3d.py).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.stencil3d import build_group_call
+from .ir import Program
+from .schedule import DataflowPlan
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
+
+
+def lower(p: Program, plan: DataflowPlan, grid_shape):
+    """Return fn(fields, scalars) -> dict of output arrays."""
+    dtype = _DTYPES[plan.dtype]
+    grid_shape = tuple(int(g) for g in grid_shape)
+    calls = [build_group_call(p, grp, plan.block, grid_shape, dtype=dtype,
+                              interpret=plan.interpret)
+             for grp in plan.groups]
+
+    def run(fields: Mapping[str, jnp.ndarray],
+            scalars: Mapping[str, jnp.ndarray] | None = None,
+            coeffs: Mapping[str, jnp.ndarray] | None = None):
+        scalars = scalars or {}
+        coeffs = coeffs or {}
+        svec = (jnp.asarray([scalars[s] for s in p.scalars], dtype=jnp.float32)
+                if p.scalars else None)
+        env = {k: jnp.asarray(v, dtype=dtype) for k, v in fields.items()}
+        outputs: dict = {}
+        for call in calls:
+            padded = {}
+            for f in call.group_inputs:
+                pads = tuple((call.pad_lo[a], call.pad_hi[a])
+                             for a in range(p.ndim))
+                padded[f] = jnp.pad(env[f], pads)
+            pc = {}
+            for c in call.group_coeffs:
+                ax = call.coeff_axis[c]
+                pc[c] = jnp.pad(jnp.asarray(coeffs[c], dtype=dtype),
+                                (call.pad_lo[ax], call.pad_hi[ax]))
+            res = call(padded, svec, pc)
+            env.update(res)
+            for f, v in res.items():
+                if p.fields[f].role.value == "output":
+                    outputs[f] = v
+        return outputs
+
+    return run

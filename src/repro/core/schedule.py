@@ -1,0 +1,124 @@
+"""DataflowPlan — the HLS-dialect analogue (paper §3.1).
+
+Where the paper's HLS dialect records FPGA decisions (streams, pipeline II,
+unroll, array_partition, AXI bundles), the plan records their TPU analogues:
+
+  hls.create_stream / dataflow  ->  fuse-group boundaries + Pallas pipeline
+  hls.pipeline(II)              ->  grid/block shape (VMEM tiling)
+  hls.unroll                    ->  in-tile vectorisation (VPU lanes; implicit)
+  hls.array_partition           ->  window layout (halo), lane alignment
+  hls.interface / bundles       ->  PartitionSpec per field (chips = banks)
+
+A plan is pure data: both backends and the distributed executor consume it,
+and the hillclimb loop mutates it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+from .. import hw
+from .ir import Program
+from .passes import infer_halo, stage_split
+
+
+@dataclasses.dataclass
+class DataflowPlan:
+    # fuse groups: ordered list of lists of op indices
+    groups: list
+    # output tile shape per axis (the VMEM block)
+    block: tuple
+    # dtype for field storage/compute
+    dtype: str = "float32"
+    # backend: "pallas" | "jnp_fused" | "jnp_naive"
+    backend: str = "pallas"
+    # run pallas in interpret mode (CPU container) — real runs set False
+    interpret: bool = True
+    # distributed layout: mesh axis name per grid axis (None = unsharded)
+    mesh_axes: tuple = (None, None, None)
+    # exchange halos every k steps with k-wide halos (comm amortisation)
+    halo_every: int = 1
+
+    def describe(self) -> str:
+        g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
+        return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
+                f"mesh_axes={self.mesh_axes})")
+
+
+def _dtype_bytes(dtype: str) -> int:
+    return {"float32": 4, "bfloat16": 2, "float64": 8}[dtype]
+
+
+def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int]) -> int:
+    """Bytes of VMEM one kernel instance of the *largest* group claims.
+
+    window bytes x live inputs + margin-extended temps + output tiles,
+    times 2 for the Pallas double-buffered pipeline.
+    """
+    bs = _dtype_bytes(plan.dtype)
+    worst = 0
+    for grp in plan.groups:
+        gh = infer_halo(p, grp)
+        blk = np.minimum(np.asarray(plan.block[:p.ndim]), np.asarray(grid))
+        win = blk + gh.input_halo[:, 0] + gh.input_halo[:, 1]
+        total = int(np.prod(win)) * len(gh.group_inputs) * bs
+        for i in grp:
+            m = gh.margins[i]
+            ext = blk + m[:, 0] + m[:, 1]
+            total += int(np.prod(ext)) * bs
+        worst = max(worst, total)
+    return 2 * worst  # double buffering
+
+
+def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
+              interpret: bool = True, strategy: str = "auto",
+              dtype: str = "float32",
+              vmem_budget: int = hw.VMEM_PLAN_BUDGET) -> DataflowPlan:
+    """Pick fuse groups and a lane-aligned block shape that fits VMEM.
+
+    Mirrors the paper's auto-optimisation: the planner, not the programmer,
+    chooses the dataflow structure.  Last axis is lane-aligned to 128
+    (the 512-bit-burst analogue); the remaining axes shrink first.
+    """
+    grid = tuple(int(g) for g in grid)
+    ndim = p.ndim
+    groups = stage_split(p, strategy)
+
+    # start from a generous tile and shrink to fit the budget
+    blk = []
+    for ax in range(ndim):
+        if ax == ndim - 1:  # lane axis: multiples of 128, at least 128
+            blk.append(min(grid[ax], max(hw.LANE, hw.align_down(grid[ax], hw.LANE))))
+        else:
+            blk.append(min(grid[ax], 32 if ndim == 3 else 256))
+    blk = [max(1, b) for b in blk]
+
+    def fits(b):
+        plan = DataflowPlan(groups=groups, block=tuple(b), dtype=dtype,
+                            backend=backend, interpret=interpret)
+        return vmem_cost(p, plan, grid) <= vmem_budget
+
+    # shrink non-lane axes first, then the lane axis (keep 128 quanta)
+    guard = 0
+    while not fits(blk) and guard < 64:
+        guard += 1
+        order = list(range(ndim - 1)) + [ndim - 1]
+        shrunk = False
+        for ax in order:
+            quantum = hw.LANE if ax == ndim - 1 else 1
+            if blk[ax] > quantum:
+                blk[ax] = max(quantum, blk[ax] // 2)
+                shrunk = True
+                break
+        if not shrunk:
+            # cannot shrink further: split groups per field instead
+            if any(len(g) > 1 for g in groups):
+                groups = stage_split(p, "per_field")
+            else:
+                break
+    return DataflowPlan(groups=groups, block=tuple(blk), dtype=dtype,
+                        backend=backend, interpret=interpret)

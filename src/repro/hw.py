@@ -1,0 +1,57 @@
+"""Target-hardware constants (TPU v5e) used by planners and roofline analysis.
+
+The container executes on CPU; these numbers describe the *target* the plans,
+kernels and rooflines are derived for.  Sources: public TPU v5e datasheet
+figures as given in the task brief (197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_bf16_flops: float      # FLOP/s per chip
+    hbm_bandwidth: float        # bytes/s per chip
+    hbm_bytes: int              # HBM capacity per chip
+    ici_link_bandwidth: float   # bytes/s per link, per direction
+    ici_links: int              # links per chip (2D torus on v5e: 4)
+    vmem_bytes: int             # per-core VMEM
+    smem_bytes: int             # scalar memory (approximate)
+    mxu_shape: tuple = (128, 128)
+    sublanes: int = 8
+    lanes: int = 128
+    # crude power envelope for the paper's Fig.5/6 energy *model* (W per chip)
+    busy_watts: float = 200.0
+    idle_watts: float = 60.0
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    hbm_bytes=16 * 1024**3,
+    ici_link_bandwidth=50e9,
+    ici_links=4,
+    vmem_bytes=128 * 1024**2,
+    smem_bytes=1024**2,
+)
+
+# Budget the stencil planner may claim for windows+outputs inside one kernel
+# instance (leave headroom for Mosaic spills and double buffering: the Pallas
+# pipeline keeps 2 copies of every block in flight).
+VMEM_PLAN_BUDGET = TPU_V5E.vmem_bytes // 4
+
+LANE = TPU_V5E.lanes
+SUBLANE = TPU_V5E.sublanes
+
+
+def align_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def align_down(x: int, m: int) -> int:
+    return (x // m) * m

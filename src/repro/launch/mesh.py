@@ -1,0 +1,63 @@
+"""Production mesh definitions (deliverable e).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state; the dry-run (and only the dry-run) sets
+``--xla_force_host_platform_device_count=512`` before any jax import.
+
+Single pod: (16, 16) = 256 chips, axes (data, model)   — v5e pod.
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the "pod"
+axis is pure data parallelism over DCN/ICI-superpod links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from ..dist.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_rules(mesh, *, kind: str = "train", variant: str = "baseline",
+               seq_sharding: bool = False) -> ShardingRules:
+    """Sharding rules per workload kind.
+
+    train: TP over 'model', FSDP over 'data', DP over ('pod','data').
+    serve: TP over 'model', params replicated over 'data' (no per-token
+           FSDP gathers), batch over ('pod','data').
+
+    ``variant`` composes hillclimb levers with '+':
+      sp       — sequence-parallel activations (Megatron-SP)
+      dp_remap — no TP: treat the whole mesh as data parallel, FSDP over
+                 every axis (right answer for small models)
+      kvseq    — shard KV caches over the length dim (flash-decoding
+                 across chips)
+    """
+    multi = "pod" in mesh.axis_names
+    dp = ("pod", "data") if multi else ("data",)
+    levers = set(variant.split("+"))
+    tp = "model"
+    fsdp = "data" if kind == "train" else None
+    kv_seq = "kvseq" in levers
+    if "sp" in levers:
+        seq_sharding = True
+    if "dp_remap" in levers:
+        tp = None
+        dp = dp + ("model",)
+        fsdp = (("data", "model") if kind == "train" else None)
+    return ShardingRules(
+        mesh=mesh, tp=tp, fsdp=fsdp, dp=dp, seq_sharding=seq_sharding,
+        kv_seq_shard=kv_seq)
+
+
+def stencil_mesh_axes(mesh):
+    """Grid-axis -> mesh-axis mapping for distributed stencils:
+    x over 'data', y over 'model', z over 'pod' (if present)."""
+    if "pod" in mesh.axis_names:
+        return ("data", "model", "pod")
+    return ("data", "model", None)

@@ -1,0 +1,244 @@
+"""ShapeDtypeStruct stand-ins + sharded step builders for the dry-run.
+
+Everything here is allocation-free: ``jax.eval_shape`` produces parameter /
+optimizer / cache trees as ShapeDtypeStructs, and the step functions are
+``jax.jit(...).lower(...)``-ed against them with explicit in/out shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, SHAPES, ShapeConfig
+from ..dist.sharding import (ShardingRules, activation_context, cache_specs,
+                             named_shardings, param_specs)
+from ..models import (decode_step, init_cache, init_lm, init_whisper,
+                      lm_loss, prefill)
+from ..models.whisper import (whisper_decode_step, whisper_init_cache,
+                              whisper_loss, whisper_prefill)
+from ..train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def params_shapes(cfg: ModelConfig, inference: bool = False,
+                  unstacked: bool = False):
+    init = init_whisper if cfg.family == "encdec" else init_lm
+    shapes = jax.eval_shape(functools.partial(init, cfg),
+                            jax.random.PRNGKey(0))
+    if inference:
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), shapes)
+    if unstacked and cfg.family != "encdec":
+        # serving layout: strip the leading layer axis into a per-layer list
+        blocks = shapes.pop("blocks")
+        layer = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), blocks)
+        shapes["layers"] = [layer] * cfg.n_layers
+    return shapes
+
+
+def _batch_axes_spec(rules: ShardingRules, batch: int):
+    """Batch PartitionSpec entry, guarding divisibility (B=1 cells)."""
+    axes = [a for a in rules.batch_axes()]
+    total = 1
+    for a in axes:
+        total *= rules.mesh.shape[a]
+    if axes and batch % total == 0:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, rules: ShardingRules):
+    """ShapeDtypeStructs + NamedShardings for every model input of the cell."""
+    mesh = rules.mesh
+    B, S = shape.global_batch, shape.seq_len
+    bspec = _batch_axes_spec(rules, B)
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(bspec, None))
+    out = {"tokens": (tok, tok_sh)}
+    if shape.kind == "train":
+        out["labels"] = (tok, tok_sh)
+    if cfg.family == "encdec":
+        fr = jax.ShapeDtypeStruct((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        out["frames"] = (fr, NamedSharding(mesh, P(bspec, None, None)))
+    if shape.kind == "decode":
+        one = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out["tokens"] = (one, NamedSharding(mesh, P(bspec)))
+        out["pos"] = (jax.ShapeDtypeStruct((), jnp.int32),
+                      NamedSharding(mesh, P()))
+    return out
+
+
+# --------------------------------------------------------------------------
+# step builders (lower-ready)
+# --------------------------------------------------------------------------
+
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: ShardingRules, budget_bytes=6 * 2**30) -> int:
+    """Gradient-accumulation factor so the per-layer saved residuals
+    (L · B_loc/mb · S · D · 2 bytes) fit the activation budget."""
+    dp = 1
+    for a in rules.batch_axes():
+        dp *= rules.mesh.shape[a]
+    b_loc = max(shape.global_batch // dp, 1)
+    tp = rules.mesh.shape[rules.tp] if rules.tp else 1
+    h_loc = (cfg.n_heads // tp) if cfg.n_heads % tp == 0 else cfg.n_heads
+    mb = 1
+    while mb < b_loc:
+        saved = (cfg.n_layers * (b_loc / mb) * shape.seq_len
+                 * cfg.d_model * 2)
+        # flash-attention f32 score tiles (~3 live copies in the bwd
+        # recompute); chunk = 2048 in AttnSpec
+        chunk = min(2048, shape.seq_len)
+        flash = 3 * (b_loc / mb) * h_loc * shape.seq_len * chunk * 4
+        if saved + flash <= budget_bytes:
+            break
+        mb *= 2
+    return mb
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: ShardingRules, remat: bool = True,
+                     microbatches: int | None = None):
+    """Returns (fn, example_args, in_shardings) for jit/lower."""
+    opt_cfg = OptConfig()
+    if microbatches is None:
+        microbatches = auto_microbatches(cfg, shape, rules)
+    mb = microbatches
+    pshapes = params_shapes(cfg)
+    ps = param_specs(cfg, pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s), ps,
+                          is_leaf=lambda s: isinstance(s, P))
+    oshapes = jax.eval_shape(adamw_init, pshapes)
+    oshard = {"mu": pshard, "nu": pshard,
+              "count": NamedSharding(rules.mesh, P())}
+    ins = input_specs(cfg, shape, rules)
+
+    def accumulate(loss_fn, params, *batch_parts):
+        """Gradient accumulation: scan over mb microbatch slices."""
+        if mb == 1:
+            (loss, _), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, *batch_parts)
+            return loss, grads
+
+        split = [x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+                 for x in batch_parts]
+
+        def acc(carry, xs):
+            g_acc, l_acc = carry
+            (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, *xs)
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                             g_acc, g)
+            return (g, l_acc + l), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (grads, loss), _ = jax.lax.scan(acc, (zeros, 0.0), tuple(split))
+        return loss / mb, jax.tree.map(lambda g: g / mb, grads)
+
+    if cfg.family == "encdec":
+        def loss_fn(params, frames, tokens, labels):
+            return whisper_loss(cfg, params, frames, tokens, labels,
+                                remat=remat)
+
+        def step(params, opt_state, frames, tokens, labels):
+            with activation_context(rules):
+                loss, grads = accumulate(loss_fn, params, frames, tokens,
+                                         labels)
+                params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                                     opt_state)
+            return params, opt_state, loss
+
+        args = (pshapes, oshapes, ins["frames"][0], ins["tokens"][0],
+                ins["labels"][0])
+        in_sh = (pshard, oshard, ins["frames"][1], ins["tokens"][1],
+                 ins["labels"][1])
+    else:
+        def loss_fn(params, tokens, labels):
+            return lm_loss(cfg, params, tokens, labels, remat=remat)
+
+        def step(params, opt_state, tokens, labels):
+            with activation_context(rules):
+                loss, grads = accumulate(loss_fn, params, tokens, labels)
+                params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                                     opt_state)
+            return params, opt_state, loss
+
+        args = (pshapes, oshapes, ins["tokens"][0], ins["labels"][0])
+        in_sh = (pshard, oshard, ins["tokens"][1], ins["labels"][1])
+    step.microbatches = mb
+    return step, args, in_sh
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: ShardingRules):
+    pshapes = params_shapes(cfg, inference=True)
+    ps = param_specs(cfg, pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s), ps,
+                          is_leaf=lambda s: isinstance(s, P))
+    ins = input_specs(cfg, shape, rules)
+    max_len = shape.seq_len
+
+    if cfg.family == "encdec":
+        def step(params, frames, tokens):
+            with activation_context(rules):
+                return whisper_prefill(cfg, params, frames, tokens, max_len)
+        args = (pshapes, ins["frames"][0], ins["tokens"][0])
+        in_sh = (pshard, ins["frames"][1], ins["tokens"][1])
+    else:
+        def step(params, tokens):
+            with activation_context(rules):
+                return prefill(cfg, params, tokens, max_len)
+        args = (pshapes, ins["tokens"][0])
+        in_sh = (pshard, ins["tokens"][1])
+    return step, args, in_sh
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                      rules: ShardingRules):
+    """serve_step: one new token against a KV cache of length seq_len."""
+    pshapes = params_shapes(cfg, inference=True, unstacked=True)
+    ps = param_specs(cfg, pshapes, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s), ps,
+                          is_leaf=lambda s: isinstance(s, P))
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        cshapes = jax.eval_shape(
+            functools.partial(whisper_init_cache, cfg, B, S))
+    else:
+        cshapes = jax.eval_shape(functools.partial(init_cache, cfg, B, S))
+    cspec = cache_specs(cfg, cshapes, rules)
+    cshard = jax.tree.map(lambda s: NamedSharding(rules.mesh, s), cspec,
+                          is_leaf=lambda s: isinstance(s, P))
+    ins = input_specs(cfg, shape, rules)
+    dec = whisper_decode_step if cfg.family == "encdec" else decode_step
+
+    def step(params, cache, tokens, pos):
+        with activation_context(rules):
+            return dec(cfg, params, cache, tokens, pos)
+
+    args = (pshapes, cshapes, ins["tokens"][0], ins["pos"][0])
+    in_sh = (pshard, cshard, ins["tokens"][1], ins["pos"][1])
+    step.out_shardings = (None, cshard)   # pin the returned cache layout
+    return step, args, in_sh
+
+
+def build_step(cfg, shape, rules, remat=True):
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules, remat=remat)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, rules)
+    return build_decode_step(cfg, shape, rules)

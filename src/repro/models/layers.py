@@ -1,0 +1,449 @@
+"""Transformer building blocks: norms, RoPE, attention family, MLP, MoE.
+
+Pure-functional JAX (no framework): ``init_*`` return param pytrees (nested
+dicts of arrays), ``*_apply`` are shape-polymorphic functions.  Everything is
+batch-first ``(B, S, ...)`` and scan-friendly (uniform per-layer shapes).
+
+Attention paths:
+* dense masked attention for short sequences (training shapes)
+* blockwise flash (lax.scan over KV chunks, running max/denominator) for
+  long prefill — O(S·chunk) memory
+* sliding-window attention via per-q-block KV slabs — the paper's
+  shift-buffer idea applied to the sequence dimension: each query tile reads
+  a bounded overlapping window, O(S·(w+Bq)) compute (see kernels/swa.py for
+  the Pallas twin)
+* decode attention over a (possibly ring-buffer) KV cache
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# initialisers
+# --------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(d, kind="rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def norm_apply(p, x, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (nrm * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(d_head, theta):
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,) absolute positions."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                 # (d/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    causal: bool = True
+    window: int = 0            # 0 = global
+    softcap: float = 0.0
+    chunk: int = 1024          # blockwise path threshold/size
+    qk_norm: bool = False
+
+
+def init_attention(key, d_model, spec: AttnSpec, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    h, kv, dh = spec.n_heads, spec.n_kv_heads, spec.d_head
+    p = {
+        "wq": _dense_init(ks[0], (d_model, h, dh), d_model, dtype),
+        "wk": _dense_init(ks[1], (d_model, kv, dh), d_model, dtype),
+        "wv": _dense_init(ks[2], (d_model, kv, dh), d_model, dtype),
+        "wo": _dense_init(ks[3], (h, dh, d_model), h * dh, dtype),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = init_norm(dh, dtype=dtype)
+        p["k_norm"] = init_norm(dh, dtype=dtype)
+    return p
+
+
+def _repeat_kv(k, n_heads):
+    kvh = k.shape[-2]
+    if kvh == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // kvh, axis=-2)
+
+
+def _softcap(logits, cap):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def _dense_scores(q, k, spec, qpos, kpos):
+    """(B,Sq,H,D)x(B,Sk,H,D) -> masked f32 logits (B,H,Sq,Sk)."""
+    scale = 1.0 / math.sqrt(spec.d_head)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, spec.softcap)
+    mask = jnp.ones((1, 1), jnp.bool_)
+    dq, dk = qpos[:, None], kpos[None, :]
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), jnp.bool_)
+    if spec.causal:
+        ok &= dk <= dq
+    if spec.window:
+        ok &= dk > dq - spec.window
+    return jnp.where(ok[None, None], logits, -1e30)
+
+
+def dense_attention(q, k, v, spec: AttnSpec, qpos=None, kpos=None):
+    B, Sq = q.shape[:2]
+    Sk = k.shape[1]
+    if qpos is None:
+        qpos = jnp.arange(Sq)
+    if kpos is None:
+        kpos = jnp.arange(Sk)
+    k = _repeat_kv(k, spec.n_heads)
+    v = _repeat_kv(v, spec.n_heads)
+    logits = _dense_scores(q, k, spec, qpos, kpos)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def flash_attention(q, k, v, spec: AttnSpec):
+    """Blockwise attention, O(S·chunk) memory: lax.scan over KV chunks."""
+    B, S, H, D = q.shape
+    C = min(spec.chunk, S)
+    if S % C:
+        raise ValueError(f"seq {S} not divisible by chunk {C}")
+    k = _repeat_kv(k, spec.n_heads)
+    v = _repeat_kv(v, spec.n_heads)
+    nkv = S // C
+    kc = k.reshape(B, nkv, C, H, D)
+    vc = v.reshape(B, nkv, C, H, D)
+    scale = 1.0 / math.sqrt(D)
+    qpos = jnp.arange(S)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, blk = inputs
+        kpos = blk * C + jnp.arange(C)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        logits = _softcap(logits, spec.softcap)
+        ok = jnp.ones((S, C), jnp.bool_)
+        if spec.causal:
+            ok &= kpos[None, :] <= qpos[:, None]
+        if spec.window:
+            ok &= kpos[None, :] > qpos[:, None] - spec.window
+        logits = jnp.where(ok[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(nkv)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,S,H,D)
+
+
+def swa_attention(q, k, v, spec: AttnSpec):
+    """Sliding-window attention via per-q-block KV slabs (stencil pattern).
+
+    Query tile i attends to KV positions [i·Bq − w, (i+1)·Bq): an overlapping
+    window slab — the exact structure of the stencil shift buffer, with halo
+    = window.  O(S·(w + Bq)) compute and memory.
+    """
+    B, S, H, D = q.shape
+    w = spec.window
+    Bq = min(max(spec.chunk // 2, 128), S)
+    if S % Bq:
+        raise ValueError(f"seq {S} not divisible by q-block {Bq}")
+    nb = S // Bq
+    k = _repeat_kv(k, spec.n_heads)
+    v = _repeat_kv(v, spec.n_heads)
+    slab = w + Bq
+    # pad KV on the left by w so every slab is in range
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    scale = 1.0 / math.sqrt(D)
+
+    def block(i):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, i * Bq, Bq, axis=1)
+        k_blk = jax.lax.dynamic_slice_in_dim(kp, i * Bq, slab, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(vp, i * Bq, slab, axis=1)
+        qpos = i * Bq + jnp.arange(Bq)
+        kpos = i * Bq - w + jnp.arange(slab)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                            preferred_element_type=jnp.float32) * scale
+        logits = _softcap(logits, spec.softcap)
+        ok = (kpos[None, :] <= qpos[:, None]) & \
+             (kpos[None, :] > qpos[:, None] - w) & (kpos[None, :] >= 0)
+        logits = jnp.where(ok[None, None], logits, -1e30)
+        wgt = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", wgt, v_blk)
+
+    out = jax.lax.map(block, jnp.arange(nb))        # (nb,B,Bq,H,D)
+    return out.swapaxes(0, 1).reshape(B, S, H, D)
+
+
+def attention_apply(p, x, spec: AttnSpec, positions=None, rope_theta=10000.0,
+                    use_rope=True, kv_override=None, norm_kind="rmsnorm"):
+    """Full attention block: proj -> rope -> attend -> out-proj.
+
+    ``kv_override``: (k, v) from an encoder for cross-attention.
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    else:
+        k, v = kv_override
+    if spec.qk_norm:
+        q = norm_apply(p["q_norm"], q, norm_kind)
+        k = norm_apply(p["k_norm"], k, norm_kind)
+    if positions is None:
+        positions = jnp.arange(S)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        if kv_override is None:
+            k = apply_rope(k, positions, rope_theta)
+    if kv_override is not None:
+        out = dense_attention(q, k, v, dataclasses.replace(spec, causal=False,
+                                                           window=0))
+    elif spec.window and S > spec.window:
+        out = swa_attention(q, k, v, spec)
+    elif S > spec.chunk:
+        out = flash_attention(q, k, v, spec)
+    else:
+        out = dense_attention(q, k, v, spec)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# -------------------------------------------------------------------- decode
+
+def decode_attention(p, x, cache_k, cache_v, pos, spec: AttnSpec,
+                     rope_theta=10000.0, use_rope=True, ring=False,
+                     norm_kind="rmsnorm"):
+    """One-token attention against a KV cache.
+
+    ``ring=True`` (SWA layers): the cache is a ring buffer of length
+    ``window`` — the sequence-dimension shift buffer; new KV overwrite slot
+    ``pos % window``.
+    Returns (attn_out, new_k_cache, new_v_cache).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bd,dhk->bhk", x, p["wq"])[:, None]      # (B,1,H,D)
+    k = jnp.einsum("bd,dhk->bhk", x, p["wk"])[:, None]
+    v = jnp.einsum("bd,dhk->bhk", x, p["wv"])[:, None]
+    if spec.qk_norm:
+        q = norm_apply(p["q_norm"], q, norm_kind)
+        k = norm_apply(p["k_norm"], k, norm_kind)
+    posv = jnp.full((B, 1), pos)
+    if use_rope:
+        q = apply_rope(q, posv, rope_theta)
+        k = apply_rope(k, posv, rope_theta)
+    L = cache_k.shape[1]
+    slot = (pos % L) if ring else jnp.minimum(pos, L - 1)
+    # one-hot select write instead of dynamic-update-slice: elementwise ops
+    # partition trivially, so the cache can stay sharded along the LENGTH
+    # dim (flash-decoding layout) — a DUS on a sharded dim would force
+    # GSPMD to all-gather the whole cache every token.
+    sel = (jnp.arange(L) == slot)[None, :, None, None]
+    ck = jnp.where(sel, k.astype(cache_k.dtype), cache_k)
+    cv = jnp.where(sel, v.astype(cache_v.dtype), cache_v)
+    from ..dist.sharding import shard_activation
+    ck = shard_activation(ck, "cache")
+    cv = shard_activation(cv, "cache")
+    # grouped-query formulation: never materialise repeated KV — the
+    # broadcast+reshape of jnp.repeat does not propagate a length-sharded
+    # layout through GSPMD (it forced full cache all-gathers)
+    KV = ck.shape[2]
+    G = spec.n_heads // KV
+    qg = q[:, 0].reshape(q.shape[0], KV, G, spec.d_head)       # (B,KV,G,D)
+    scale = 1.0 / math.sqrt(spec.d_head)
+    logits = jnp.einsum("bkgd,blkd->bkgl", qg, ck,
+                        preferred_element_type=jnp.float32) * scale
+    logits = _softcap(logits, spec.softcap)
+    idx = jnp.arange(L)
+    if ring:
+        valid = idx <= pos                 # until buffer full; then all valid
+        valid = jnp.where(pos >= L, jnp.ones_like(valid), valid)
+    else:
+        valid = idx <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgl,blkd->bkgd", w,
+                     cv.astype(jnp.float32))                    # (B,KV,G,D)
+    out = out.reshape(q.shape[0], spec.n_heads, spec.d_head).astype(q.dtype)
+    return jnp.einsum("bhk,hkd->bd", out, p["wo"]), ck, cv
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": functools.partial(jax.nn.gelu, approximate=False),
+    "gelu_tanh": functools.partial(jax.nn.gelu, approximate=True),
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def init_mlp(key, d_model, d_ff, glu=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": _dense_init(ks[0], (d_model, d_ff), d_model, dtype),
+         "w_out": _dense_init(ks[1], (d_ff, d_model), d_ff, dtype)}
+    if glu:
+        p["w_gate"] = _dense_init(ks[2], (d_model, d_ff), d_model, dtype)
+    return p
+
+
+def mlp_apply(p, x, act="silu"):
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def init_moe(key, d_model, d_ff, n_experts, glu=True, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p = {"router": _dense_init(ks[0], (d_model, n_experts), d_model,
+                               jnp.float32),
+         "w_in": _dense_init(ks[1], (n_experts, d_model, d_ff), d_model, dtype),
+         "w_out": _dense_init(ks[2], (n_experts, d_ff, d_model), d_ff, dtype)}
+    if glu:
+        p["w_gate"] = _dense_init(ks[3], (n_experts, d_model, d_ff), d_model,
+                                  dtype)
+    return p
+
+
+def moe_apply(p, x, top_k=2, act="silu", capacity_factor=1.25,
+              no_drop=False):
+    """Capacity-factor scatter dispatch (GShard-style), expert-TP friendly.
+
+    x: (B, S, D) -> (B, S, D).  Tokens above an expert's capacity are dropped
+    (contribute zero) — the standard trade for static shapes on TPU.
+    ``no_drop=True`` sizes capacity at the worst case (decode path: exact).
+    """
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    T = B * S
+    xf = x.reshape(T, D)
+    gate_logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)                  # (T,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    if no_drop and T * top_k <= E:
+        # decode fast path (tiny T): gather ONLY the selected experts'
+        # weights — HBM reads drop from all-E to top-k per token, the
+        # difference between dense-dispatch and the 6·N_active roofline
+        w_in_sel = p["w_in"][top_i]                             # (T,k,D,F)
+        h = jnp.einsum("td,tkdf->tkf", xf, w_in_sel)
+        if "w_gate" in p:
+            g = jnp.einsum("td,tkdf->tkf", xf, p["w_gate"][top_i])
+            h = _ACTS[act](g) * h
+        else:
+            h = _ACTS[act](h)
+        out = jnp.einsum("tkf,tkfd->tkd", h, p["w_out"][top_i])
+        y = (out * top_p[..., None].astype(x.dtype)).sum(axis=1)
+        aux = _load_balance_loss(probs, top_i, E)
+        return y.reshape(B, S, D), aux
+
+    eid = top_i.reshape(-1)                                     # (T*k,)
+    wgt = top_p.reshape(-1)
+    tid = jnp.repeat(jnp.arange(T), top_k)
+    cap = T if no_drop else max(int(capacity_factor * T * top_k / E), 1)
+
+    oh = jax.nn.one_hot(eid, E, dtype=jnp.int32)                # (T*k, E)
+    rank = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1,
+                               eid[:, None], axis=1)[:, 0]      # (T*k,)
+    keep = rank < cap
+    rank = jnp.where(keep, rank, 0)
+
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    buf = buf.at[eid, rank].add(
+        jnp.where(keep[:, None], xf[tid], jnp.zeros_like(xf[tid])))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"])           # (E,cap,D)
+
+    gathered = out_e[eid, rank]                                 # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, jnp.zeros_like(gathered))
+    y = jnp.zeros((T, D), x.dtype).at[tid].add(
+        gathered * wgt[:, None].astype(x.dtype))
+    aux = _load_balance_loss(probs, top_i, E)
+    return y.reshape(B, S, D), aux
+
+
+def _load_balance_loss(probs, top_i, E):
+    """Switch-style auxiliary load-balancing loss."""
+    T = probs.shape[0]
+    fraction = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32), 0)
+    prob_mass = jnp.mean(probs, axis=0)
+    return E * jnp.sum(fraction * prob_mass)

@@ -1,0 +1,322 @@
+"""State-space / recurrent blocks: Mamba-style selective SSM (hymba) and
+xLSTM's mLSTM / sLSTM.
+
+Streaming structure: all three are linear-in-sequence recurrences — the
+sequence-dimension analogue of the paper's shift buffer (bounded state
+carried forward, one element in / one result out per step).
+
+Training/prefill uses *chunkwise* parallel forms: ``lax.scan`` over sequence
+chunks carrying the recurrent state, parallel math inside the chunk — the
+same carried-state + tile pattern as the stencil backend, keeping memory
+O(S·chunk) instead of O(S²) (mLSTM) / O(S·d·N) (associative scan).
+Decode uses O(1) state updates.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_norm, norm_apply
+
+_CHUNK = 256
+
+
+def _split_chunks(x, c):
+    B, S = x.shape[:2]
+    return x.reshape(B, S // c, c, *x.shape[2:]).swapaxes(0, 1)  # (nc,B,c,...)
+
+
+def _merge_chunks(x):
+    nc, B, c = x.shape[:3]
+    return x.swapaxes(0, 1).reshape(B, nc * c, *x.shape[3:])
+
+
+# --------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's parallel-head partner to attention)
+# --------------------------------------------------------------------------
+
+def init_mamba(key, d_model, d_state=16, expand=2, conv=4, dtype=jnp.float32):
+    di = expand * d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": _dense_init(ks[0], (d_model, 2 * di), d_model, dtype),
+        "conv_w": _dense_init(ks[1], (conv, di), conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bc": _dense_init(ks[2], (di, 2 * d_state), di, dtype),
+        "w_dt": _dense_init(ks[3], (di, 1), di, dtype),
+        "dt_bias": jnp.full((di,), -4.0, dtype),     # softplus -> small dt
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1,
+                                             dtype=jnp.float32), (di, 1))),
+        "D_skip": jnp.ones((di,), dtype),
+        "w_out": _dense_init(ks[4], (di, d_model), di, dtype),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """x: (B,S,C), depthwise causal conv, kernel (K,C) — a 1-D stencil."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K tiny (4); unrolled shifted adds
+        out = out + xp[:, i:i + x.shape[1]] * w[i]
+    return out + b
+
+
+def mamba_apply(p, x, state=None, chunk=_CHUNK):
+    """x: (B,S,D) -> (y, new_state).
+
+    state None  -> chunkwise scan over S (training/prefill)
+    state given -> single-step decode (S == 1); state = (h, conv_tail)
+    """
+    B, S, D = x.shape
+    K = p["conv_w"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        xi_raw = xi
+        xi = _causal_conv1d(xi_raw, p["conv_w"], p["conv_b"])
+        conv_tail = xi_raw[:, -(K - 1):]   # raw (pre-conv) tail for decode
+    else:
+        h_prev, tail = state
+        seq = jnp.concatenate([tail, xi], axis=1)
+        xi = (seq[:, -K:] * p["conv_w"]).sum(1, keepdims=True) + p["conv_b"]
+        conv_tail = seq[:, -(K - 1):]
+    xi = jax.nn.silu(xi)
+
+    bc = jnp.einsum("bsc,ce->bse", xi, p["w_bc"]).astype(jnp.float32)
+    Bm, Cm = jnp.split(bc, 2, axis=-1)                       # (B,S,N)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsc,co->bso", xi, p["w_dt"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                  # (di,N)
+
+    log_decay = dt[..., None] * A[None, None]                 # (B,S,di,N) <=0
+    drive = (dt[..., None] * Bm[:, :, None, :]
+             * xi.astype(jnp.float32)[..., None])             # (B,S,di,N)
+
+    if state is None:
+        c = min(chunk, S)
+        if S % c:
+            c = S  # fall back: small odd sequences
+        ldc = _split_chunks(log_decay, c)                     # (nc,B,c,di,N)
+        drc = _split_chunks(drive, c)
+        cmc = _split_chunks(Cm, c)
+
+        def chunk_step(h_in, inp):
+            ld, dr, cm = inp
+            def combine(a, b):
+                return (a[0] + b[0], b[1] + a[1] * jnp.exp(b[0]))
+            cum_ld, h_local = jax.lax.associative_scan(combine, (ld, dr),
+                                                       axis=1)
+            h = h_local + jnp.exp(cum_ld) * h_in[:, None]
+            y = jnp.einsum("bscn,bsn->bsc", h, cm)
+            return h[:, -1], y
+
+        h0 = jnp.zeros((B,) + log_decay.shape[2:], jnp.float32)
+        new_h, yc = jax.lax.scan(chunk_step, h0, (ldc, drc, cmc))
+        y = _merge_chunks(yc)
+    else:
+        h_prev, _ = state
+        h = jnp.exp(log_decay[:, 0]) * h_prev + drive[:, 0]
+        y = jnp.einsum("bcn,bn->bc", h, Cm[:, 0])[:, None]
+        new_h = h
+
+    y = y + p["D_skip"].astype(jnp.float32) * xi.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsc,cd->bsd", y, p["w_out"])
+    return out, (new_h, conv_tail)
+
+
+def mamba_init_state(p, batch, dtype=jnp.float32):
+    di, N = p["A_log"].shape
+    K = p["conv_w"].shape[0]
+    return (jnp.zeros((batch, di, N), jnp.float32),
+            jnp.zeros((batch, K - 1, di), dtype))
+
+
+# --------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory, chunkwise form) + sLSTM (sequential)
+# --------------------------------------------------------------------------
+
+def init_mlstm(key, d_model, n_heads, expand=2, dtype=jnp.float32):
+    di = expand * d_model
+    dh = di // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense_init(ks[0], (d_model, 2 * di), d_model, dtype),
+        "wq": _dense_init(ks[1], (di, n_heads, dh), di, dtype),
+        "wk": _dense_init(ks[2], (di, n_heads, dh), di, dtype),
+        "wv": _dense_init(ks[3], (di, n_heads, dh), di, dtype),
+        "w_if": _dense_init(ks[4], (di, 2 * n_heads), di, jnp.float32),
+        "if_bias": jnp.concatenate([jnp.zeros((n_heads,), jnp.float32),
+                                    jnp.full((n_heads,), 3.0, jnp.float32)]),
+        "out_norm": init_norm(dh, dtype=jnp.float32),
+        "w_down": _dense_init(ks[5], (di, d_model), di, dtype),
+    }
+
+
+def mlstm_apply(p, x, state=None, chunk=_CHUNK):
+    """Stabilised mLSTM.  Chunkwise scan for sequences; O(1) decode.
+
+    Chunk math (per head): carry (C, n, m̃).  Within a chunk,
+      intra: D_ij = exp(F_i - F_j + i_j - m_i), j <= i   (F = cum log f)
+      inter: q_i reads carried C with decay exp(F_i + m̃ - m_i)
+      state: C' = exp(F_tot + m̃ - m̃')·C + Σ_t exp(F_tot - F_t + i_t - m̃')·k v
+    Returns (y, new_state)."""
+    B, S, D = x.shape
+    H, dh = p["wq"].shape[1], p["wq"].shape[2]
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ehk->bshk", xi, p["wq"]) / math.sqrt(dh)
+    k = jnp.einsum("bse,ehk->bshk", xi, p["wk"]) / math.sqrt(dh)
+    v = jnp.einsum("bse,ehk->bshk", xi, p["wv"])
+    gates = (jnp.einsum("bse,eg->bsg", xi.astype(jnp.float32), p["w_if"])
+             + p["if_bias"])
+    ig, fg = jnp.split(gates, 2, axis=-1)                     # (B,S,H)
+    log_f = -jax.nn.softplus(-fg)
+
+    if state is None:
+        st = mlstm_init_state_b(B, H, dh)
+    else:
+        st = state
+
+    if S == 1 and state is not None:
+        C_prev, n_prev, m_prev = st
+        lf, ii = log_f[:, 0], ig[:, 0]
+        m_new = jnp.maximum(lf + m_prev, ii)
+        fsc = jnp.exp(lf + m_prev - m_new)
+        isc = jnp.exp(ii - m_new)
+        qf = q[:, 0].astype(jnp.float32)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        C = fsc[..., None, None] * C_prev + isc[..., None, None] * \
+            jnp.einsum("bhk,bhd->bhkd", kf, vf)
+        n = fsc[..., None] * n_prev + isc[..., None] * kf
+        num = jnp.einsum("bhk,bhkd->bhd", qf, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                          jnp.exp(-m_new))
+        y = (num / den[..., None])[:, None]
+        new_state = (C, n, m_new)
+    else:
+        c = min(chunk, S)
+        if S % c:
+            c = S
+        qc, kc, vc = (_split_chunks(t, c) for t in (q, k, v))
+        lfc, igc = _split_chunks(log_f, c), _split_chunks(ig, c)
+
+        def chunk_step(carry, inp):
+            Cst, nst, mst = carry
+            qb, kb, vb, lf, ii = inp
+            qb = qb.astype(jnp.float32); kb = kb.astype(jnp.float32)
+            vb = vb.astype(jnp.float32)
+            F = jnp.cumsum(lf, axis=1)                        # (B,c,H)
+            # stabiliser per query position
+            intra_log = (F[:, :, None] - F[:, None, :]
+                         + ii[:, None, :, :])                 # (B,cq,ck,H)
+            causal = jnp.tril(jnp.ones((c, c), jnp.bool_))
+            intra_log = jnp.where(causal[None, :, :, None], intra_log,
+                                  -jnp.inf)
+            inter_log = F + mst[:, None]                      # (B,c,H)
+            m_i = jnp.maximum(jax.lax.stop_gradient(intra_log).max(2),
+                              jax.lax.stop_gradient(inter_log))
+            m_i = jnp.maximum(m_i, 0.0)
+            dintra = jnp.exp(intra_log - m_i[:, :, None])
+            dinter = jnp.exp(inter_log - m_i)                 # (B,c,H)
+            scores = jnp.einsum("bqhx,bkhx->bqkh", qb, kb)
+            wmat = scores * dintra
+            y_intra = jnp.einsum("bqkh,bkhd->bqhd", wmat, vb)
+            y_inter = jnp.einsum("bqhk,bhkd->bqhd", qb, Cst) \
+                * dinter[..., None]
+            # denominator: q·n with n_q = Σ_j dintra[q,j]·k_j + dinter·n_st,
+            # so q·n = Σ_j wmat[q,j] + dinter·(q·n_st)
+            den_intra = wmat.sum(2)
+
+            den_inter = jnp.einsum("bqhk,bhk->bqh", qb, nst) * dinter
+            den = jnp.maximum(jnp.abs(den_intra + den_inter), jnp.exp(-m_i))
+            y = (y_intra + y_inter) / den[..., None]
+
+            # state update
+            F_tot = F[:, -1]                                  # (B,H)
+            m_up = jnp.maximum(F_tot + mst,
+                               (F_tot[:, None] - F + ii).max(1))
+            sc_old = jnp.exp(F_tot + mst - m_up)
+            sc_tok = jnp.exp(F_tot[:, None] - F + ii - m_up[:, None])
+            C_new = sc_old[..., None, None] * Cst + jnp.einsum(
+                "bkh,bkhx,bkhd->bhxd", sc_tok, kb, vb)
+            n_new = sc_old[..., None] * nst + jnp.einsum(
+                "bkh,bkhx->bhx", sc_tok, kb)
+            return (C_new, n_new, m_up), y
+
+        (Cst, nst, mst), yc = jax.lax.scan(chunk_step, st,
+                                           (qc, kc, vc, lfc, igc))
+        y = _merge_chunks(yc)
+        new_state = (Cst, nst, mst)
+
+    y = norm_apply(p["out_norm"], y.astype(x.dtype))
+    y = y.reshape(B, S, -1) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, p["w_down"]), new_state
+
+
+def mlstm_init_state_b(batch, H, dh):
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.zeros((batch, H), jnp.float32))
+
+
+def mlstm_init_state(p, batch):
+    H, dh = p["wq"].shape[1], p["wq"].shape[2]
+    return mlstm_init_state_b(batch, H, dh)
+
+
+def init_slstm(key, d_model, n_heads, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": _dense_init(ks[0], (d_model, 4 * d_model), d_model, dtype),
+        "r_gates": _dense_init(ks[1], (d_model, 4 * d_model), d_model, dtype),
+        "g_bias": jnp.zeros((4 * d_model,), jnp.float32),
+        "out_norm": init_norm(d_model, dtype=jnp.float32),
+        "w_down": _dense_init(ks[2], (d_model, d_model), d_model, dtype),
+    }
+
+
+def slstm_apply(p, x, state=None):
+    """sLSTM with exponential gating — a true recurrence through h (the
+    hidden-to-gate feedback makes it inherently sequential; lax.scan)."""
+    B, S, D = x.shape
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32),
+                    p["w_gates"].astype(jnp.float32)) + p["g_bias"]
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = (z, z, z, z)
+    c0, n0, h0, m0 = state
+    R = p["r_gates"].astype(jnp.float32)
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        g = wx_t + h @ R
+        zt, it, ft, ot = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        lf = -jax.nn.softplus(-ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_s = jnp.exp(it - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * zt
+        n_new = f_s * n + i_s
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    y = norm_apply(p["out_norm"], y)
+    return jnp.einsum("bsd,de->bse", y, p["w_down"]), (c, n, h, m)
+
+
+def slstm_init_state(p, batch):
+    D = p["w_down"].shape[0]
+    z = jnp.zeros((batch, D), jnp.float32)
+    return (z, z, z, z)

@@ -1,0 +1,406 @@
+"""Unified LM covering the assigned decoder/hybrid/recurrent architectures.
+
+Families:
+  decoder  — (GQA | MQA) x (global | SWA | alternating local:global) x
+             (dense | MoE) x (softcaps, qk-norm, squared-ReLU, GeGLU...)
+  hybrid   — hymba: attention and a Mamba SSM head run in *parallel* in every
+             block, outputs summed
+  xlstm    — mLSTM blocks with sLSTM every k-th layer, no FFN (d_ff=0)
+
+Two execution paths:
+  * training / no-cache forward: ``lax.scan`` over stacked block params
+    (uniform leaf shapes; heterogeneous layer kinds dispatched with
+    ``lax.switch`` inside the scan) — fast compiles at 96 layers.
+  * prefill / decode: python-unrolled layers with per-layer caches, so local
+    (SWA) layers keep *ring-buffer* KV caches of length ``window`` — the
+    sequence-dimension shift buffer — while global layers keep full caches.
+
+Activation sharding hooks go through ``repro.dist.sharding.shard_activation``
+(no-ops unless a mesh context is installed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard_activation
+from . import ssm
+from .layers import (AttnSpec, attention_apply, decode_attention,
+                     init_attention, init_mlp, init_moe, init_norm,
+                     mlp_apply, moe_apply, norm_apply)
+
+_DT = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def _attn_spec(cfg: ModelConfig, kind: str) -> AttnSpec:
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    d_head=cfg.d_head, causal=True,
+                    window=cfg.window if kind == "local" else 0,
+                    softcap=cfg.attn_softcap, qk_norm=cfg.qk_norm,
+                    chunk=2048)
+
+
+def _kind_ids(cfg: ModelConfig) -> jnp.ndarray:
+    kinds = sorted(set(cfg.layer_pattern))
+    table = {k: i for i, k in enumerate(kinds)}
+    ids = [table[cfg.layer_kind(i)] for i in range(cfg.n_layers)]
+    return jnp.asarray(ids, jnp.int32), kinds
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 8)
+    p = {"ln1": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if cfg.family == "xlstm":
+        # superset params: every layer carries both cell kinds; the scan
+        # dispatches on kind (sLSTM layers ignore mLSTM weights and v.v.)
+        p["mlstm"] = ssm.init_mlstm(ks[0], cfg.d_model, cfg.n_heads,
+                                    cfg.ssm_expand, dtype)
+        if cfg.slstm_every:
+            p["slstm"] = ssm.init_slstm(ks[1], cfg.d_model, cfg.n_heads, dtype)
+        return p
+    spec = _attn_spec(cfg, "global")
+    p["attn"] = init_attention(ks[0], cfg.d_model, spec, dtype)
+    p["ln2"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    if cfg.post_norm:
+        p["ln1_post"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        p["ln2_post"] = init_norm(cfg.d_model, cfg.norm, dtype)
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.glu, dtype)
+    elif cfg.d_ff:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dtype)
+    if cfg.family == "hybrid":
+        p["ssm"] = ssm.init_mamba(ks[2], cfg.d_model, cfg.ssm_state,
+                                  cfg.ssm_expand, cfg.ssm_conv, dtype)
+    return p
+
+
+def init_lm(cfg: ModelConfig, key):
+    dtype = _DT[cfg.param_dtype]
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_padded, cfg.d_model))
+                  * scale).astype(dtype),
+        "ln_f": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            ks[1], (cfg.d_model, cfg.vocab_padded)) * scale).astype(dtype)
+    if cfg.pos == "learned":
+        params["pos_emb"] = (jax.random.normal(ks[2], (cfg.max_seq,
+                                                       cfg.d_model))
+                             * scale).astype(dtype)
+    bkeys = jax.random.split(ks[3], cfg.n_layers)
+    blocks = [init_block(cfg, bk, dtype) for bk in bkeys]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block application (shared by scan + unrolled paths)
+# --------------------------------------------------------------------------
+
+def cast_params(p, dtype):
+    """Mixed precision: compute in ``dtype``, master params stay f32."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, p)
+
+
+def block_apply(cfg: ModelConfig, bp, x, kind: str, positions):
+    bp = cast_params(bp, _DT[cfg.dtype])
+    h = norm_apply(bp["ln1"], x, cfg.norm)
+    if cfg.family == "xlstm":
+        if kind == "slstm":
+            y, _ = ssm.slstm_apply(bp["slstm"], h)
+        else:
+            y, _ = ssm.mlstm_apply(bp["mlstm"], h)
+        return x + y, jnp.float32(0.0)
+    spec = _attn_spec(cfg, kind)
+    attn = attention_apply(bp["attn"], h, spec, positions, cfg.rope_theta,
+                           use_rope=(cfg.pos == "rope"), norm_kind=cfg.norm)
+    if cfg.family == "hybrid":
+        smo, _ = ssm.mamba_apply(bp["ssm"], h)
+        attn = attn + smo
+    if cfg.post_norm:
+        attn = norm_apply(bp["ln1_post"], attn, cfg.norm)
+    x = x + attn
+    x = shard_activation(x, "residual")
+    h = norm_apply(bp["ln2"], x, cfg.norm)
+    aux = jnp.float32(0.0)
+    if cfg.n_experts:
+        y, aux = moe_apply(bp["moe"], h, cfg.top_k, cfg.act,
+                           cfg.capacity_factor)
+    elif cfg.d_ff:
+        y = mlp_apply(bp["mlp"], h, cfg.act)
+    else:
+        y = jnp.zeros_like(h)
+    if cfg.post_norm:
+        y = norm_apply(bp["ln2_post"], y, cfg.norm)
+    return x + y, aux
+
+
+# --------------------------------------------------------------------------
+# forward (training / scoring)
+# --------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.pos == "learned":
+        S = tokens.shape[1]
+        x = x + params["pos_emb"][:S][None]
+    return x.astype(_DT[cfg.dtype])
+
+
+def unembed(cfg, params, x):
+    x = norm_apply(cast_params(params["ln_f"], _DT[cfg.dtype]), x, cfg.norm)
+    table = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, table.astype(x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padding rows so softmax/argmax ignore them (stays sharded)
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(vid < cfg.vocab, logits, -1e30)
+    return shard_activation(logits, "logits")
+
+
+def lm_forward(cfg: ModelConfig, params, tokens, remat: bool = False):
+    """tokens (B,S) int32 -> logits (B,S,V) f32.  Scan over stacked blocks."""
+    x = embed_tokens(cfg, params, tokens)
+    x = shard_activation(x, "residual")
+    positions = jnp.arange(tokens.shape[1])
+    kind_ids, kinds = _kind_ids(cfg)
+
+    def body(x, inp):
+        bp, kid = inp
+        if len(kinds) == 1:
+            out, aux = block_apply(cfg, bp, x, kinds[0], positions)
+        else:
+            out, aux = jax.lax.switch(
+                kid, [functools.partial(block_apply, cfg, bp, kind=k,
+                                        positions=positions) for k in kinds],
+                x)
+        return out, aux
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(body, x, (params["blocks"], kind_ids))
+    return unembed(cfg, params, x), auxs.mean()
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, labels, remat=False,
+            aux_weight=0.01, z_weight=1e-4):
+    """Next-token CE (labels = tokens shifted by caller); -100 masks."""
+    logits, aux = lm_forward(cfg, params, tokens, remat=remat)
+    mask = labels >= 0
+    lbl = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    # label logit via mask-sum (not take_along_axis): the compare/select/
+    # reduce fuses and stays vocab-sharded — no logits all-gather under TP
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    picked = jnp.sum(jnp.where(vocab_iota == lbl[..., None], logits, 0.0),
+                     axis=-1)
+    ll = picked - logz
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = -(ll * mask).sum() / denom
+    z_loss = ((logz * mask) ** 2).sum() / denom
+    loss = ce + aux_weight * aux + z_weight * z_loss
+    return loss, {"ce": ce, "aux": aux, "z": z_loss,
+                  "ppl": jnp.exp(jnp.minimum(ce, 20.0))}
+
+
+# --------------------------------------------------------------------------
+# KV / state caches (prefill + decode)
+# --------------------------------------------------------------------------
+
+def _layer_params(params, i):
+    if "layers" in params:      # unstacked (serving layout): free access
+        return params["layers"][i]
+    return jax.tree.map(lambda a: a[i], params["blocks"])
+
+
+def unstack_params(cfg, params):
+    """Serving layout: per-layer param trees instead of the scan stack.
+
+    Dynamic-slicing the (L, ...) stack inside a decode step materialises a
+    full copy of the weights as temporaries; serving engines store weights
+    unstacked so layer access is free."""
+    out = {k: v for k, v in params.items() if k != "blocks"}
+    out["layers"] = [jax.tree.map(lambda a: a[i], params["blocks"])
+                     for i in range(cfg.n_layers)]
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer cache list.  Local (SWA) layers get ring buffers of length
+    ``window`` — bounded state for arbitrarily long decodes."""
+    adt = _DT[cfg.dtype]
+    cache = []
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        entry = {}
+        if cfg.family == "xlstm":
+            if kind == "slstm":
+                entry = {"state": (jnp.zeros((batch, cfg.d_model),
+                                             jnp.float32),) * 4}
+            else:
+                di = cfg.ssm_expand * cfg.d_model
+                dh = di // cfg.n_heads
+                entry = {"state": ssm.mlstm_init_state_b(batch, cfg.n_heads, dh)}
+            cache.append(entry)
+            continue
+        L = min(cfg.window, max_len) if (kind == "local" and cfg.window) \
+            else max_len
+        entry = {"k": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.d_head), adt),
+                 "v": jnp.zeros((batch, L, cfg.n_kv_heads, cfg.d_head), adt)}
+        if cfg.family == "hybrid":
+            di = cfg.ssm_expand * cfg.d_model
+            entry["ssm"] = (jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+                            jnp.zeros((batch, cfg.ssm_conv - 1, di), adt))
+        cache.append(entry)
+    return cache
+
+
+def _is_ring(cfg: ModelConfig, kind: str) -> bool:
+    return kind == "local" and cfg.window > 0
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int):
+    """Process a prompt (B,S); return (last-position logits, filled cache)."""
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(S)
+    cache = init_cache(cfg, B, max_len)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        bp = cast_params(_layer_params(params, i), _DT[cfg.dtype])
+        kind = cfg.layer_kind(i)
+        entry = dict(cache[i])
+        if cfg.family == "xlstm":
+            h = norm_apply(bp["ln1"], x, cfg.norm)
+            if kind == "slstm":
+                y, st = ssm.slstm_apply(bp["slstm"], h)
+            else:
+                y, st = ssm.mlstm_apply(bp["mlstm"], h)
+            entry["state"] = st
+            x = x + y
+            new_cache.append(entry)
+            continue
+        h = norm_apply(bp["ln1"], x, cfg.norm)
+        spec = _attn_spec(cfg, kind)
+        # compute attention over the prompt and capture k/v for the cache
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wv"])
+        attn = attention_apply(bp["attn"], h, spec, positions, cfg.rope_theta,
+                               use_rope=(cfg.pos == "rope"),
+                               norm_kind=cfg.norm)
+        if spec.qk_norm:
+            k = norm_apply(bp["attn"]["k_norm"], k, cfg.norm)
+        if cfg.pos == "rope":
+            k = ssm_apply_rope_guard(k, positions, cfg.rope_theta)
+        kc, vc = entry["k"], entry["v"]
+        L = kc.shape[1]
+        ring = _is_ring(cfg, kind)
+        if ring and S >= L:
+            # ring buffer smaller than the prompt: keep the last L KVs at
+            # their rotated slots (slot = position % L)
+            idx = jnp.arange(S - L, S) % L
+            kc = kc.at[:, idx].set(k[:, -L:].astype(kc.dtype))
+            vc = vc.at[:, idx].set(v[:, -L:].astype(vc.dtype))
+        else:
+            kc = kc.at[:, :S].set(k.astype(kc.dtype))
+            vc = vc.at[:, :S].set(v.astype(vc.dtype))
+        entry["k"], entry["v"] = kc, vc
+        if cfg.family == "hybrid":
+            smo, st = ssm.mamba_apply(bp["ssm"], h)
+            entry["ssm"] = st
+            attn = attn + smo
+        if cfg.post_norm:
+            attn = norm_apply(bp["ln1_post"], attn, cfg.norm)
+        x = x + attn
+        h2 = norm_apply(bp["ln2"], x, cfg.norm)
+        if cfg.n_experts:
+            y, _ = moe_apply(bp["moe"], h2, cfg.top_k, cfg.act,
+                             cfg.capacity_factor)
+        elif cfg.d_ff:
+            y = mlp_apply(bp["mlp"], h2, cfg.act)
+        else:
+            y = jnp.zeros_like(h2)
+        if cfg.post_norm:
+            y = norm_apply(bp["ln2_post"], y, cfg.norm)
+        x = x + y
+        new_cache.append(entry)
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits[:, 0], new_cache
+
+
+def ssm_apply_rope_guard(k, positions, theta):
+    from .layers import apply_rope
+    return apply_rope(k, positions, theta)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step: tokens (B,) int32, pos scalar -> (logits, cache)."""
+    x = embed_tokens(cfg, params, tokens[:, None])[:, 0]      # (B,D)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        bp = cast_params(_layer_params(params, i), _DT[cfg.dtype])
+        kind = cfg.layer_kind(i)
+        entry = dict(cache[i])
+        if cfg.family == "xlstm":
+            h = norm_apply(bp["ln1"], x[:, None], cfg.norm)
+            if kind == "slstm":
+                y, st = ssm.slstm_apply(bp["slstm"], h, entry["state"])
+            else:
+                y, st = ssm.mlstm_apply(bp["mlstm"], h, entry["state"])
+            entry["state"] = st
+            x = x + y[:, 0]
+            new_cache.append(entry)
+            continue
+        h = norm_apply(bp["ln1"], x[:, None], cfg.norm)[:, 0]
+        spec = _attn_spec(cfg, kind)
+        attn, kc, vc = decode_attention(
+            bp["attn"], h, entry["k"], entry["v"], pos, spec, cfg.rope_theta,
+            use_rope=(cfg.pos == "rope"), ring=_is_ring(cfg, kind),
+            norm_kind=cfg.norm)
+        entry["k"], entry["v"] = kc, vc
+        if cfg.family == "hybrid":
+            smo, st = ssm.mamba_apply(bp["ssm"], h[:, None], entry["ssm"])
+            entry["ssm"] = st
+            attn = attn + smo[:, 0]
+        if cfg.post_norm:
+            attn = norm_apply(bp["ln1_post"], attn, cfg.norm)
+        x = x + attn
+        h2 = norm_apply(bp["ln2"], x[:, None], cfg.norm)
+        if cfg.n_experts:
+            y, _ = moe_apply(bp["moe"], h2, cfg.top_k, cfg.act,
+                             cfg.capacity_factor, no_drop=True)
+            y = y[:, 0]
+        elif cfg.d_ff:
+            y = mlp_apply(bp["mlp"], h2, cfg.act)[:, 0]
+        else:
+            y = jnp.zeros_like(x)
+        if cfg.post_norm:
+            y = norm_apply(bp["ln2_post"], y, cfg.norm)
+        x = x + y
+        new_cache.append(entry)
+    logits = unembed(cfg, params, x[:, None])
+    return logits[:, 0], new_cache

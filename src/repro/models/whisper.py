@@ -1,0 +1,243 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the brief the audio frontend is a STUB: ``input_specs()`` supplies
+precomputed frame embeddings (B, enc_seq, d_model) — the conv1d x2 +
+log-mel stack is represented by a single learned projection so the interface
+matches (the real conv frontend is a 1-D stencil; see kernels/ and
+DESIGN.md §Arch-applicability).
+
+Encoder: bidirectional attention over frames (learned positions).
+Decoder: causal self-attention + cross-attention, learned positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..dist.sharding import shard_activation
+from .layers import (AttnSpec, attention_apply, init_attention, init_mlp,
+                     init_norm, mlp_apply, norm_apply)
+from .transformer import cast_params
+
+_DT = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def _spec(cfg, causal):
+    return AttnSpec(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    d_head=cfg.d_head, causal=causal, window=0,
+                    chunk=2048)
+
+
+def _init_enc_block(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": init_attention(ks[0], cfg.d_model, _spec(cfg, False), dtype),
+            "ln2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def _init_dec_block(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm, dtype),
+            "attn": init_attention(ks[0], cfg.d_model, _spec(cfg, True), dtype),
+            "ln_x": init_norm(cfg.d_model, cfg.norm, dtype),
+            "xattn": init_attention(ks[1], cfg.d_model, _spec(cfg, False), dtype),
+            "ln2": init_norm(cfg.d_model, cfg.norm, dtype),
+            "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.glu, dtype)}
+
+
+def init_whisper(cfg: ModelConfig, key):
+    dtype = _DT[cfg.param_dtype]
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    params = {
+        "frontend_proj": (jax.random.normal(ks[0], (cfg.d_model, cfg.d_model))
+                          * scale).astype(dtype),          # stub projection
+        "enc_pos": (jax.random.normal(ks[1], (cfg.enc_seq, cfg.d_model))
+                    * scale).astype(dtype),
+        "embed": (jax.random.normal(ks[2], (cfg.vocab_padded, cfg.d_model))
+                  * scale).astype(dtype),
+        "dec_pos": (jax.random.normal(ks[3], (cfg.max_seq, cfg.d_model))
+                    * scale).astype(dtype),
+        "ln_enc": init_norm(cfg.d_model, cfg.norm, dtype),
+        "ln_f": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    ek = jax.random.split(ks[4], cfg.n_enc_layers)
+    enc = [_init_enc_block(cfg, k, dtype) for k in ek]
+    params["enc_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc)
+    dk = jax.random.split(ks[5], cfg.n_layers)
+    dec = [_init_dec_block(cfg, k, dtype) for k in dk]
+    params["dec_blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *dec)
+    return params
+
+
+def encode(cfg, params, frames, remat=False):
+    """frames: (B, enc_seq, d_model) precomputed embeddings (frontend stub)."""
+    x = jnp.einsum("bsd,de->bse", frames.astype(_DT[cfg.dtype]),
+                   params["frontend_proj"].astype(_DT[cfg.dtype]))
+    x = x + params["enc_pos"][:x.shape[1]][None].astype(x.dtype)
+    spec = _spec(cfg, False)
+
+    def body(x, bp):
+        bp = cast_params(bp, x.dtype)
+        h = norm_apply(bp["ln1"], x, cfg.norm)
+        x = x + attention_apply(bp["attn"], h, spec, use_rope=False,
+                                norm_kind=cfg.norm)
+        h = norm_apply(bp["ln2"], x, cfg.norm)
+        x = x + mlp_apply(bp["mlp"], h, cfg.act)
+        x = shard_activation(x, "residual")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return norm_apply(cast_params(params["ln_enc"], x.dtype), x, cfg.norm)
+
+
+def decode(cfg, params, enc_out, tokens, remat=False):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(_DT[cfg.dtype])
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    self_spec = _spec(cfg, True)
+
+    def body(x, bp):
+        bp = cast_params(bp, x.dtype)
+        h = norm_apply(bp["ln1"], x, cfg.norm)
+        x = x + attention_apply(bp["attn"], h, self_spec, use_rope=False,
+                                norm_kind=cfg.norm)
+        h = norm_apply(bp["ln_x"], x, cfg.norm)
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, bp["xattn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, bp["xattn"]["wv"])
+        x = x + attention_apply(bp["xattn"], h, self_spec, use_rope=False,
+                                kv_override=(k, v), norm_kind=cfg.norm)
+        h = norm_apply(bp["ln2"], x, cfg.norm)
+        x = x + mlp_apply(bp["mlp"], h, cfg.act)
+        x = shard_activation(x, "residual")
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = norm_apply(cast_params(params["ln_f"], x.dtype), x, cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        params["embed"].astype(x.dtype)).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        vid = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        logits = jnp.where(vid < cfg.vocab, logits, -1e30)
+    return shard_activation(logits, "logits")
+
+
+def whisper_forward(cfg, params, frames, tokens, remat=False):
+    return decode(cfg, params, encode(cfg, params, frames, remat=remat),
+                  tokens, remat=remat)
+
+
+def whisper_loss(cfg, params, frames, tokens, labels, remat=False):
+    logits = whisper_forward(cfg, params, frames, tokens, remat=remat)
+    mask = labels >= 0
+    lbl = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    picked = jnp.sum(jnp.where(vocab_iota == lbl[..., None], logits, 0.0),
+                     axis=-1)
+    ll = picked - logz
+    denom = jnp.maximum(mask.sum(), 1)
+    ce = -(ll * mask).sum() / denom
+    return ce, {"ce": ce}
+
+
+# --------------------------------------------------------------------------
+# serving: prefill + cached decode
+# --------------------------------------------------------------------------
+
+def _wlayer(params, which, i):
+    return jax.tree.map(lambda a: a[i], params[which])
+
+
+def whisper_init_cache(cfg, batch, max_len):
+    adt = _DT[cfg.dtype]
+    cache = []
+    for _ in range(cfg.n_layers):
+        cache.append({
+            "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), adt),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.d_head), adt),
+            # cross-attention K/V are filled at prefill from the encoder
+            "xk": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head), adt),
+            "xv": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads, cfg.d_head), adt),
+        })
+    return cache
+
+
+def whisper_prefill(cfg, params, frames, tokens, max_len):
+    """Encode audio, run the decoder over the prompt, build caches."""
+    from .layers import dense_attention
+    B, S = tokens.shape
+    enc_out = encode(cfg, params, frames)
+    x = params["embed"][tokens].astype(_DT[cfg.dtype])
+    x = x + params["dec_pos"][:S][None].astype(x.dtype)
+    self_spec = _spec(cfg, True)
+    cache = whisper_init_cache(cfg, B, max_len)
+    for i in range(cfg.n_layers):
+        bp = cast_params(_wlayer(params, "dec_blocks", i), x.dtype)
+        entry = cache[i]
+        h = norm_apply(bp["ln1"], x, cfg.norm)
+        k = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, bp["attn"]["wv"])
+        entry["k"] = entry["k"].at[:, :S].set(k.astype(entry["k"].dtype))
+        entry["v"] = entry["v"].at[:, :S].set(v.astype(entry["v"].dtype))
+        x = x + attention_apply(bp["attn"], h, self_spec, use_rope=False,
+                                norm_kind=cfg.norm)
+        h = norm_apply(bp["ln_x"], x, cfg.norm)
+        xk = jnp.einsum("bsd,dhk->bshk", enc_out, bp["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc_out, bp["xattn"]["wv"])
+        entry["xk"] = xk.astype(entry["xk"].dtype)
+        entry["xv"] = xv.astype(entry["xv"].dtype)
+        x = x + attention_apply(bp["xattn"], h, self_spec, use_rope=False,
+                                kv_override=(xk, xv), norm_kind=cfg.norm)
+        h = norm_apply(bp["ln2"], x, cfg.norm)
+        x = x + mlp_apply(bp["mlp"], h, cfg.act)
+    x = norm_apply(cast_params(params["ln_f"], x.dtype), x, cfg.norm)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1],
+                        params["embed"].astype(x.dtype)).astype(jnp.float32)
+    return logits, cache
+
+
+def whisper_decode_step(cfg, params, cache, tokens, pos):
+    """One decoder token with self-attn cache + fixed cross-attn KV."""
+    from .layers import decode_attention, dense_attention, AttnSpec
+    import dataclasses as _dc
+    B = tokens.shape[0]
+    x = params["embed"][tokens].astype(_DT[cfg.dtype])
+    x = x + jnp.take(params["dec_pos"], pos, axis=0).astype(x.dtype)[None]
+    self_spec = _spec(cfg, True)
+    new_cache = []
+    for i in range(cfg.n_layers):
+        bp = cast_params(_wlayer(params, "dec_blocks", i), x.dtype)
+        entry = dict(cache[i])
+        h = norm_apply(bp["ln1"], x[:, None], cfg.norm)[:, 0]
+        attn, kc, vc = decode_attention(bp["attn"], h, entry["k"], entry["v"],
+                                        pos, self_spec, use_rope=False,
+                                        norm_kind=cfg.norm)
+        entry["k"], entry["v"] = kc, vc
+        x = x + attn
+        h = norm_apply(bp["ln_x"], x[:, None], cfg.norm)
+        q_spec = _dc.replace(self_spec, causal=False)
+        out = dense_attention(
+            jnp.einsum("bsd,dhk->bshk", h, bp["xattn"]["wq"]),
+            entry["xk"], entry["xv"], q_spec)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, bp["xattn"]["wo"])[:, 0]
+        h = norm_apply(bp["ln2"], x[:, None], cfg.norm)
+        x = x + mlp_apply(bp["mlp"], h, cfg.act)[:, 0]
+        new_cache.append(entry)
+    x = norm_apply(cast_params(params["ln_f"], x.dtype), x[:, None], cfg.norm)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(
+        x.dtype)).astype(jnp.float32)
+    return logits[:, 0], new_cache

@@ -1,0 +1,3 @@
+from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
+                        cosine_schedule, OptConfig)
+from .loop import TrainConfig, Trainer, make_train_step

@@ -1,0 +1,37 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam/EF-SGD family).
+
+Gradients are quantised to int8 with a per-tensor scale before the (logical)
+all-reduce and dequantised after; the quantisation residual is carried in an
+error-feedback buffer so the scheme is unbiased over time.  Under jit the
+quantise/dequantise pair marks the reduction operand as int8 — on a real
+fabric this shrinks DP all-reduce bytes 4x (f32) / 2x (bf16).  The executor
+here demonstrates numerics + the EF invariant; byte savings are claimed in
+the roofline analysis, not measured on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(g, err):
+    """Returns (dequantised gradient, new error) for one leaf."""
+    g = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g - deq
+
+
+def ef_compress_grads(grads, err_state):
+    out = jax.tree.map(compress_decompress, grads, err_state)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make tests/strategies.py importable regardless of how pytest is invoked
+sys.path.insert(0, os.path.dirname(__file__))

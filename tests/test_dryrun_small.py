@@ -1,0 +1,65 @@
+"""Dry-run machinery on a reduced mesh (8 fake devices, subprocess).
+
+The production dry-run (512 devices, full configs) runs via
+``python -m repro.launch.dryrun``; this test proves the same build_step /
+input_specs / sharding-rules path lowers and compiles for every workload
+kind and representative arch families on a (2, 4) mesh with smoke configs.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, jax
+from repro.configs import get_smoke
+from repro.configs.base import ShapeConfig
+from repro.dist.sharding import ShardingRules
+from repro.launch.specs import build_step
+from repro.analysis.roofline import parse_collectives
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+CASES = [
+    ("h2o_danube_1_8b", ShapeConfig("train", 64, 8, "train"), "train"),
+    ("mixtral_8x7b", ShapeConfig("train", 64, 8, "train"), "train"),
+    ("gemma3_1b", ShapeConfig("prefill", 64, 8, "prefill"), "serve"),
+    ("hymba_1_5b", ShapeConfig("decode", 64, 8, "decode"), "serve"),
+    ("xlstm_350m", ShapeConfig("decode", 64, 8, "decode"), "serve"),
+    ("whisper_small", ShapeConfig("train", 64, 8, "train"), "train"),
+    ("nemotron_4_340b", ShapeConfig("decode", 64, 8, "decode"), "serve"),
+]
+
+for arch, shape, kind in CASES:
+    cfg = get_smoke(arch)
+    rules = ShardingRules(mesh=mesh, tp="model",
+                          fsdp="data" if kind == "train" else None,
+                          dp=("data",))
+    step, args, in_sh = build_step(cfg, shape, rules)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=in_sh).lower(*args).compile()
+    mem = compiled.memory_analysis()
+    assert mem.temp_size_in_bytes >= 0
+    cost = compiled.cost_analysis()
+    assert cost.get("flops", 0) > 0
+    coll = parse_collectives(compiled.as_text())
+    print(f"{arch} {shape.kind}: ok, {len(coll)} collectives")
+print("DRYRUN_SMALL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_machinery_small_mesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
+    assert "DRYRUN_SMALL_OK" in r.stdout

@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests (required deliverable f): reduced config of
+the same family, one forward + one train step on CPU, output shapes + no NaNs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke
+from repro.models import (decode_step, init_cache, init_lm, init_whisper,
+                          lm_forward, lm_loss, prefill, whisper_forward,
+                          whisper_loss)
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _tokens(cfg, key=KEY, s=S):
+    return jax.random.randint(key, (B, s), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke(arch)
+    toks = _tokens(cfg)
+    labels = jnp.roll(toks, -1, axis=1)
+    if cfg.family == "encdec":
+        params = init_whisper(cfg, KEY)
+        frames = jax.random.normal(KEY, (B, cfg.enc_seq, cfg.d_model))
+        logits = whisper_forward(cfg, params, frames, toks)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+        def loss_fn(p):
+            return whisper_loss(cfg, p, frames, toks, labels)[0]
+    else:
+        params = init_lm(cfg, KEY)
+        logits, _ = lm_forward(cfg, params, toks)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+        def loss_fn(p):
+            return lm_loss(cfg, p, toks, labels)[0]
+
+    # one optimizer step: loss finite, grads finite, params change
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in gleaves)
+    opt = adamw_init(params)
+    new_params, _, m = adamw_update(OptConfig(lr=1e-3), params, grads, opt)
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    changed = jax.tree.map(
+        lambda a, b: bool(jnp.any(a != b)), params, new_params)
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_exact_assignment(arch):
+    """Pin every published full config against the assignment table."""
+    cfg = get_config(arch)
+    expect = {
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000, 8),
+        "grok_1_314b": (64, 6144, 48, 8, 32768, 131072, 8),
+        "h2o_danube_1_8b": (24, 2560, 32, 8, 6912, 32000, 0),
+        "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000, 0),
+        "gemma2_2b": (26, 2304, 8, 4, 9216, 256000, 0),
+        "gemma3_1b": (26, 1152, 4, 1, 6912, 262144, 0),
+        "chameleon_34b": (48, 8192, 64, 8, 22016, 65536, 0),
+        "hymba_1_5b": (32, 1600, 25, 5, 5504, 32001, 0),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865, 0),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304, 0),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab, cfg.n_experts)
+    assert got == expect, f"{arch}: {got} != {expect}"
+
+
+def test_param_counts_plausible():
+    """Analytic N close to the architecture's nameplate size."""
+    # (arch, expected params, tolerance)
+    for arch, n_expect, tol in [
+        ("mixtral_8x7b", 46.7e9, 0.10),
+        ("h2o_danube_1_8b", 1.8e9, 0.10),
+        ("nemotron_4_340b", 340e9, 0.10),
+        ("gemma2_2b", 2.6e9, 0.25),       # nameplate excludes embeddings
+        ("xlstm_350m", 350e6, 0.30),
+        ("grok_1_314b", 314e9, 0.15),
+    ]:
+        n = get_config(arch).num_params()
+        assert abs(n - n_expect) / n_expect < tol, f"{arch}: {n:.3e}"
+
+
+@pytest.mark.parametrize("arch", ["h2o_danube_1_8b", "gemma2_2b", "gemma3_1b",
+                                  "mixtral_8x7b", "hymba_1_5b", "xlstm_350m",
+                                  "nemotron_4_340b", "chameleon_34b",
+                                  "grok_1_314b"])
+def test_decode_matches_forward(arch):
+    """Teacher-forced prefill+decode equals the training forward pass."""
+    cfg = dataclasses.replace(get_smoke(arch), capacity_factor=8.0)
+    params = init_lm(cfg, KEY)
+    toks = np.asarray(_tokens(cfg, s=24))
+    full, _ = lm_forward(cfg, params, jnp.asarray(toks))
+    sp = 8
+    lp, cache = prefill(cfg, params, jnp.asarray(toks[:, :sp]), max_len=64)
+    errs = [np.abs(np.asarray(lp) - np.asarray(full[:, sp - 1])).max()]
+    for t in range(sp, 24):
+        ld, cache = decode_step(cfg, params, cache,
+                                jnp.asarray(toks[:, t]), jnp.int32(t))
+        errs.append(np.abs(np.asarray(ld) - np.asarray(full[:, t])).max())
+    assert max(errs) < 0.25, f"{arch}: decode diverges {max(errs)}"  # bf16
+
+
+def test_ring_buffer_cache_bounded():
+    """SWA decode state stays at window size regardless of position."""
+    cfg = get_smoke("h2o_danube_1_8b")
+    params = init_lm(cfg, KEY)
+    cache = init_cache(cfg, B, max_len=64)
+    assert cache[0]["k"].shape[1] == cfg.window  # ring length = window
+    tok = jnp.zeros((B,), jnp.int32)
+    # decode far past the window: no growth, still finite
+    logits, cache = decode_step(cfg, params, cache, tok, jnp.int32(60))
+    assert cache[0]["k"].shape[1] == cfg.window
+    assert bool(jnp.isfinite(logits).all())
