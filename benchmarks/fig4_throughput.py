@@ -14,6 +14,7 @@ Two number sets, clearly labelled:
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -21,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.stencil_roofline import model_program
-from repro.apps import pw_advection, tracer_advection
-from repro.core import compile_program
+from repro.apps import pw_advection, pw_advection_update, tracer_advection
+from repro.core import compile_program, run_time_loop
 
 # paper sizes: 8M / 32M points (134M is modeled only on this container)
 SIZES = {
@@ -30,6 +31,10 @@ SIZES = {
     "32M": (512, 256, 256),
 }
 MODEL_ONLY_SIZES = {"134M": (1024, 512, 256)}
+
+# fused-vs-host time-loop comparison (the PR's steps/sec headline number)
+FUSED_GRID = (64, 64, 128)
+FUSED_STEPS = 10
 
 
 def _data(p, grid, seed=0):
@@ -81,3 +86,72 @@ def run(emit):
         ratio = model.mpts("pallas") / model.mpts("jnp_fused")
         emit(f"fig4/{p.name}/speedup_vs_next_best", 0.0,
              f"{ratio:.1f}x modeled (paper: 14-100x vs DaCe)")
+
+
+def run_fused_loop(emit, grid=FUSED_GRID, steps=FUSED_STEPS,
+                   backends=("jnp_naive", "jnp_fused")):
+    """Fused on-device time loop vs host-driven loop, steps/sec both ways.
+
+    The fused path lowers all ``steps`` iterations into one jitted program
+    (single dispatch, carry-resident pre-padded fields); the host path is N
+    dispatches with a fresh ``jnp.pad`` round per step — the round trip the
+    paper's device-resident dataflow eliminates.
+    """
+    p = pw_advection()
+    fields, scalars, coeffs = _data(p, grid)
+    update = pw_advection_update(0.1)
+    pts = float(np.prod(grid))
+    tag = "x".join(str(g) for g in grid)
+    for backend in backends:
+        ex = compile_program(p, grid, backend=backend)
+        exN = compile_program(p, grid, backend=backend, steps=steps,
+                              update=update)
+        modes = (
+            ("host_loop", lambda: run_time_loop(ex, dict(fields), scalars,
+                                                coeffs, steps, update)),
+            ("fused_loop", lambda: exN(fields, scalars, coeffs)),
+        )
+        sps = {}
+        for mode, fn in modes:
+            jax.block_until_ready(fn()["u"])        # compile + warm
+            dt = float("inf")
+            for _ in range(3):                      # best-of-3 (CPU noise)
+                t0 = time.perf_counter()
+                out = fn()
+                jax.block_until_ready(out["u"])
+                dt = min(dt, time.perf_counter() - t0)
+            sps[mode] = steps / dt
+            emit(f"fig4/pw_advection/fused/{tag}/{backend}/{mode}",
+                 dt * 1e6, f"{steps / dt:.2f} steps/s "
+                           f"{pts * steps / dt / 1e6:.1f} MPt/s")
+        emit(f"fig4/pw_advection/fused/{tag}/{backend}/speedup", 0.0,
+             f"{sps['fused_loop'] / sps['host_loop']:.2f}x fused vs host")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fused-loop", action="store_true",
+                    help="run only the fused-vs-host time-loop comparison")
+    ap.add_argument("--steps", type=int, default=FUSED_STEPS)
+    ap.add_argument("--grid", default="x".join(map(str, FUSED_GRID)),
+                    help="AxBxC grid for --fused-loop")
+    ap.add_argument("--backends", default="jnp_naive,jnp_fused",
+                    help="comma list; add pallas for the interpret-mode "
+                         "kernels (slow on CPU)")
+    args = ap.parse_args()
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.2f},{derived}", flush=True)
+
+    if args.fused_loop:
+        grid = tuple(int(g) for g in args.grid.split("x"))
+        if len(grid) != 3:
+            ap.error(f"--grid must be AxBxC (3-D), got {args.grid!r}")
+        run_fused_loop(emit, grid=grid, steps=args.steps,
+                       backends=tuple(args.backends.split(",")))
+    else:
+        run(emit)
+
+
+if __name__ == "__main__":
+    main()

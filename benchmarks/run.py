@@ -5,18 +5,56 @@ or dimensionless rows).  An optional LM-roofline summary is appended when
 dry-run artifacts exist under experiments/dryrun/.
 
 Run:  PYTHONPATH=src python -m benchmarks.run
+
+``--smoke`` runs a CI-sized subset instead (tiny grid, a few steps, all
+three backends incl. pallas interpret) and writes the rows to a
+``BENCH_*.json`` artifact so the perf trajectory accumulates per commit.
 """
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
+import os
+import platform
+import time
 
-from benchmarks import fig4_throughput, fig5_6_energy, tab1_2_resources
+try:
+    from benchmarks import fig4_throughput, fig5_6_energy, tab1_2_resources
+except ModuleNotFoundError:  # invoked as `python benchmarks/run.py`
+    import fig4_throughput
+    import fig5_6_energy
+    import tab1_2_resources
 
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def run_smoke(out_path: str) -> None:
+    """Tiny fused-loop benchmark (16^3, 3 steps, interpret mode) -> JSON."""
+    rows = []
+
+    def emit_row(name: str, us: float, derived: str = ""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us": round(us, 2), "derived": derived})
+
+    fig4_throughput.run_fused_loop(
+        emit_row, grid=(16, 16, 16), steps=3,
+        backends=("jnp_naive", "jnp_fused", "pallas"))
+    doc = {
+        "kind": "bench_smoke",
+        "grid": [16, 16, 16],
+        "steps": 3,
+        "time": time.time(),
+        "platform": platform.platform(),
+        "commit": os.environ.get("GITHUB_SHA", ""),
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
 
 
 def lm_roofline_summary(emit):
@@ -36,7 +74,18 @@ def lm_roofline_summary(emit):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized fused-loop benchmark, writes a JSON "
+                         "artifact instead of the full paper sweep")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="artifact path for --smoke")
+    args = ap.parse_args()
+
     emit("bench/header", 0.0, "name,us_per_call,derived")
+    if args.smoke:
+        run_smoke(args.out)
+        return
     fig4_throughput.run(emit)
     fig5_6_energy.run(emit)
     tab1_2_resources.run(emit)

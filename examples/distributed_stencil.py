@@ -14,16 +14,15 @@ if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
 import jax                                              # noqa: E402
 import jax.numpy as jnp                                 # noqa: E402
 import numpy as np                                      # noqa: E402
-from jax.sharding import AxisType                       # noqa: E402
 
 from repro.apps import pw_advection                     # noqa: E402
 from repro.core import compile_program                  # noqa: E402
 from repro.core.distribute import make_sharded_executor  # noqa: E402
+from repro.dist.sharding import make_auto_mesh          # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((2, 2, 2), ("X", "Y", "Z"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = make_auto_mesh((2, 2, 2), ("X", "Y", "Z"))
     p = pw_advection()
     grid = (64, 64, 128)
     rng = np.random.default_rng(0)

@@ -1,1 +1,2 @@
-from .advection import pw_advection, tracer_advection  # noqa: F401
+from .advection import (pw_advection, pw_advection_update,  # noqa: F401
+                        tracer_advection, tracer_advection_update)

@@ -61,6 +61,25 @@ def pw_advection() -> Program:
     return b.build()
 
 
+def pw_advection_update(dt: float = 0.1):
+    """Forward-Euler wind update for :func:`pw_advection` — the canonical
+    time-stepping rule shared by the examples, benchmarks and the fused
+    ``compile_program(..., steps=N, update=...)`` path."""
+    def update(fields, out):
+        return {"u": fields["u"] + dt * out["su"],
+                "v": fields["v"] + dt * out["sv"],
+                "w": fields["w"] + dt * out["sw"]}
+    return update
+
+
+def tracer_advection_update():
+    """Tracer carry rule for :func:`tracer_advection`: the corrected tracer
+    becomes next step's ``t``; velocities and metrics are steady."""
+    def update(fields, out):
+        return dict(fields, t=out["ta"])
+    return update
+
+
 def tracer_advection() -> Program:
     """24 stencil ops / 6 input fields, MUSCL-style, with dependency chains."""
     b = ProgramBuilder("tracer_advection", ndim=3)

@@ -5,4 +5,4 @@ from .frontend import (CoeffHandle, ExprHandle, FieldHandle, ProgramBuilder,
                        tanh, where)
 from .ir import Program
 from .pipeline import CompiledStencil, compile_program, run_time_loop
-from .schedule import DataflowPlan, auto_plan
+from .schedule import DataflowPlan, TimeLoopSpec, auto_plan, plan_time_loop

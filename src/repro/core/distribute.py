@@ -31,6 +31,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+try:  # public since jax 0.6; experimental before that
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from ..kernels.stencil3d import build_group_call
 from .ir import FieldRole, Program
 from .schedule import DataflowPlan, auto_plan
@@ -43,15 +48,20 @@ def _axis_size(mesh: Mesh, name) -> int:
 
 
 def halo_exchange_pad(x: jnp.ndarray, lo: Sequence[int], hi: Sequence[int],
-                      align_hi: Sequence[int], mesh_axes: Sequence) -> jnp.ndarray:
-    """Pad a local block with neighbour halos (sharded axes) or zeros."""
+                      align_hi: Sequence[int], mesh_axes: Sequence,
+                      axis_sizes: Mapping | None = None) -> jnp.ndarray:
+    """Pad a local block with neighbour halos (sharded axes) or zeros.
+
+    ``axis_sizes`` maps mesh-axis name -> size (static, from the mesh); the
+    trace environment has no portable size query across jax versions."""
     ndim = x.ndim
+    axis_sizes = axis_sizes or {}
     for ax in range(ndim):
         l, h, al = int(lo[ax]), int(hi[ax]), int(align_hi[ax])
         a = mesh_axes[ax] if ax < len(mesh_axes) else None
         if l == 0 and h == 0 and al == 0:
             continue
-        n = _axis_size_from_env(a)
+        n = 1 if a is None else int(axis_sizes[a])
         pieces = []
         if l > 0:
             if a is not None and n > 1:
@@ -75,12 +85,6 @@ def halo_exchange_pad(x: jnp.ndarray, lo: Sequence[int], hi: Sequence[int],
             pieces.append(jnp.zeros(shp, x.dtype))
         x = jnp.concatenate(pieces, axis=ax)
     return x
-
-
-def _axis_size_from_env(name) -> int:
-    if name is None:
-        return 1
-    return jax.lax.axis_size(name)
 
 
 def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
@@ -139,7 +143,8 @@ def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
         outputs = {}
         for call in calls:
             padded = {f: halo_exchange_pad(env[f], call.halo_lo, call.halo_hi,
-                                           call.align_hi, mesh_axes)
+                                           call.align_hi, mesh_axes,
+                                           dict(mesh.shape))
                       for f in call.group_inputs}
             pc = {}
             for c in call.group_coeffs:
@@ -159,8 +164,12 @@ def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
                 {f: field_spec for f in p.input_fields()},
                 {c: P() for c in p.coeffs})
     out_specs = tuple(field_spec for _ in out_names)
-    smapped = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=False)
+    try:
+        smapped = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax 0.4.x spells the replication check check_rep
+        smapped = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
 
     def run(fields: Mapping, scalars: Mapping | None = None,
             coeffs: Mapping | None = None):

@@ -37,10 +37,19 @@ def shifted(x: jnp.ndarray, offset, pad_value: float = 0.0) -> jnp.ndarray:
     return xp[idx]
 
 
-def lower(p: Program, mode: str = "fused"):
-    """Return fn(fields, scalars) -> dict of output arrays."""
+def lower(p: Program, mode: str = "fused", prepad: Mapping | None = None):
+    """Return fn(fields, scalars) -> dict of output arrays.
+
+    With ``prepad`` (field name -> (ndim, 2) halo widths) the external input
+    fields must arrive *already zero-padded* by those amounts; every Access
+    then resolves to a static slice of the persistent padded buffer instead
+    of a fresh ``jnp.pad`` — the access path the fused time loop uses for its
+    carry-resident fields.  Temps produced mid-program stay interior-shaped
+    and keep the pad-on-access path.
+    """
     if mode not in ("naive", "fused"):
         raise ValueError(mode)
+    prepadded = set(prepad or {})
 
     def run(fields: Mapping[str, jnp.ndarray],
             scalars: Mapping[str, jnp.ndarray] | None = None,
@@ -51,6 +60,14 @@ def lower(p: Program, mode: str = "fused"):
         outputs = {}
         shared_memo: dict = {}
         any_field = next(iter(fields.values()))
+        if prepad is None:
+            interior = any_field.shape
+        else:
+            fref = next(f for f in fields if f in prepadded)
+            h = prepad[fref]
+            interior = tuple(fields[fref].shape[ax]
+                             - int(h[ax, 0]) - int(h[ax, 1])
+                             for ax in range(p.ndim))
 
         def coeff(c):
             ax = p.coeffs[c.coeff]
@@ -63,14 +80,69 @@ def lower(p: Program, mode: str = "fused"):
             memo = shared_memo if mode == "fused" else {}
 
             def access(a: Access):
+                if a.field in prepadded:
+                    h = prepad[a.field]
+                    sl = tuple(slice(int(h[ax, 0]) + int(a.offset[ax]),
+                                     int(h[ax, 0]) + int(a.offset[ax])
+                                     + interior[ax])
+                               for ax in range(p.ndim))
+                    return env[a.field][sl]
                 return shifted(env[a.field], a.offset)
 
             res = evaluate(op.expr, access, lambda n: scalars[n], memo,
                            coeff=coeff)
-            res = jnp.broadcast_to(res, any_field.shape)
+            res = jnp.broadcast_to(res, interior)
             env[op.out] = res
             if p.fields[op.out].role == FieldRole.OUTPUT:
                 outputs[op.out] = res
         return outputs
+
+    return run
+
+
+def lower_time_loop(p: Program, mode: str, spec, update):
+    """Return fn(fields, scalars, coeffs) -> final fields after
+    ``spec.steps`` fused iterations (single compiled program).
+
+    Mirrors the Pallas fused loop: the ``lax.fori_loop`` carry holds the
+    persistent input fields pre-padded by ``spec.field_pad``; every step the
+    step body reads windows out of the carry (static slices, no ``jnp.pad``)
+    and the traced ``update(fields, outputs)`` writes the new interiors back
+    in place.  Halo slabs stay zero throughout (zero-halo convention).
+    """
+    import jax
+
+    fpad = spec.field_pad
+    step_fn = lower(p, mode, prepad=fpad)
+
+    def run(fields: Mapping, scalars: Mapping | None = None,
+            coeffs: Mapping | None = None):
+        scalars = dict(scalars or {})
+        coeffs = dict(coeffs or {})
+        ndim = p.ndim
+        shape = next(iter(fields.values())).shape
+        interior = {f: tuple(slice(int(fpad[f][a, 0]),
+                                   int(fpad[f][a, 0]) + shape[a])
+                             for a in range(ndim))
+                    for f in spec.persistent}
+        pads = {f: tuple((int(fpad[f][a, 0]), int(fpad[f][a, 1]))
+                         for a in range(ndim))
+                for f in spec.persistent}
+        carry = {f: jnp.pad(jnp.asarray(fields[f]), pads[f])
+                 for f in spec.persistent}
+
+        def body(_, carry):
+            outs = step_fn(carry, scalars, coeffs)
+            cur = {f: carry[f][interior[f]] for f in spec.persistent}
+            new = dict(cur)
+            new.update(update(cur, outs))
+            if spec.carry_write == "inplace":
+                return {f: carry[f].at[interior[f]].set(new[f])
+                        for f in spec.persistent}
+            # "repad": constant zero halo -> one fused interior write
+            return {f: jnp.pad(new[f], pads[f]) for f in spec.persistent}
+
+        carry = jax.lax.fori_loop(0, spec.steps, body, carry)
+        return {f: carry[f][interior[f]] for f in spec.persistent}
 
     return run

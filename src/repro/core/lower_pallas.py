@@ -16,9 +16,51 @@ import numpy as np
 
 from ..kernels.stencil3d import build_group_call
 from .ir import Program
-from .schedule import DataflowPlan
+from .schedule import DataflowPlan, TimeLoopSpec
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
+
+
+def _pad_coeffs(p: Program, calls, coeffs, dtype):
+    """Per-call padded coefficient windows ('small data', paper step 8)."""
+    out = []
+    for call in calls:
+        pc = {}
+        for c in call.group_coeffs:
+            ax = call.coeff_axis[c]
+            pc[c] = jnp.pad(jnp.asarray(coeffs[c], dtype=dtype),
+                            (call.pad_lo[ax], call.pad_hi[ax]))
+        out.append(pc)
+    return out
+
+
+def _run_groups(p: Program, calls, svec, pc_per_call, resolve_input):
+    """Run the fuse groups in order, materialising inter-group fields.
+
+    ``resolve_input(call, f, env) -> (array, actual_pad | None)`` supplies
+    each group input: either freshly padded to the call's window geometry
+    (pad None) or an oversized persistent buffer with its actual padding,
+    which the kernel slices its window out of via ``input_pad``.
+    """
+    env: dict = {}
+    outputs: dict = {}
+    for call, pc in zip(calls, pc_per_call):
+        padded, ipad = {}, {}
+        for f in call.group_inputs:
+            padded[f], actual = resolve_input(call, f, env)
+            if actual is not None:
+                ipad[f] = actual
+        res = call(padded, svec, pc, input_pad=ipad or None)
+        env.update(res)
+        for f, v in res.items():
+            if p.fields[f].role.value == "output":
+                outputs[f] = v
+    return outputs
+
+
+def _scalar_vec(p: Program, scalars):
+    return (jnp.asarray([scalars[s] for s in p.scalars], dtype=jnp.float32)
+            if p.scalars else None)
 
 
 def lower(p: Program, plan: DataflowPlan, grid_shape):
@@ -34,26 +76,86 @@ def lower(p: Program, plan: DataflowPlan, grid_shape):
             coeffs: Mapping[str, jnp.ndarray] | None = None):
         scalars = scalars or {}
         coeffs = coeffs or {}
-        svec = (jnp.asarray([scalars[s] for s in p.scalars], dtype=jnp.float32)
-                if p.scalars else None)
-        env = {k: jnp.asarray(v, dtype=dtype) for k, v in fields.items()}
-        outputs: dict = {}
-        for call in calls:
-            padded = {}
-            for f in call.group_inputs:
+        ext = {k: jnp.asarray(v, dtype=dtype) for k, v in fields.items()}
+
+        def resolve(call, f, env):
+            pads = tuple((call.pad_lo[a], call.pad_hi[a])
+                         for a in range(p.ndim))
+            return jnp.pad(env[f] if f in env else ext[f], pads), None
+
+        return _run_groups(p, calls, _scalar_vec(p, scalars),
+                           _pad_coeffs(p, calls, coeffs, dtype), resolve)
+
+    return run
+
+
+def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
+                    spec: TimeLoopSpec, update):
+    """Return fn(fields, scalars, coeffs) -> final fields after ``spec.steps``
+    fused iterations — one compiled program, no host round trips.
+
+    The carry of a ``lax.fori_loop`` holds one *pre-padded* persistent buffer
+    per program input field, sized by ``spec.field_pad`` so every consuming
+    fuse group can slice its window geometry straight out of it (the kernel's
+    ``input_pad`` path).  Halo slabs are zero under the zero-halo convention
+    and never change, so writing the back buffer each step touches only the
+    interior — either scattered in place (``carry_write="inplace"``) or
+    rebuilt as one fused interior-plus-constant-halo write (``"repad"``,
+    the default; see :class:`TimeLoopSpec`).  XLA donates the loop carry,
+    giving the front/back buffer swap ``spec.double_buffer`` assigns.
+    Coefficients are loop-invariant and padded once, outside the loop.
+    """
+    dtype = _DTYPES[plan.dtype]
+    ndim = p.ndim
+    grid_shape = tuple(int(g) for g in grid_shape)
+    calls = [build_group_call(p, grp, plan.block, grid_shape, dtype=dtype,
+                              interpret=plan.interpret)
+             for grp in plan.groups]
+    fpad = spec.field_pad
+    interior = {f: tuple(slice(int(fpad[f][a, 0]),
+                               int(fpad[f][a, 0]) + grid_shape[a])
+                         for a in range(ndim))
+                for f in spec.persistent}
+    carry_pads = {f: tuple((int(fpad[f][a, 0]), int(fpad[f][a, 1]))
+                           for a in range(ndim))
+                  for f in spec.persistent}
+
+    def run(fields: Mapping, scalars: Mapping | None = None,
+            coeffs: Mapping | None = None):
+        scalars = scalars or {}
+        coeffs = coeffs or {}
+        svec = _scalar_vec(p, scalars)
+        # coefficients never change across steps: pad per consuming group
+        # once, before the loop ("small data" stays resident)
+        pc_per_call = _pad_coeffs(p, calls, coeffs, dtype)
+        # pad the persistent carry buffers exactly once
+        carry = {f: jnp.pad(jnp.asarray(fields[f], dtype=dtype),
+                            carry_pads[f])
+                 for f in spec.persistent}
+
+        def body(_, carry):
+            def resolve(call, f, env):
+                if f in carry:              # persistent: window from carry
+                    return carry[f], fpad[f]
                 pads = tuple((call.pad_lo[a], call.pad_hi[a])
-                             for a in range(p.ndim))
-                padded[f] = jnp.pad(env[f], pads)
-            pc = {}
-            for c in call.group_coeffs:
-                ax = call.coeff_axis[c]
-                pc[c] = jnp.pad(jnp.asarray(coeffs[c], dtype=dtype),
-                                (call.pad_lo[ax], call.pad_hi[ax]))
-            res = call(padded, svec, pc)
-            env.update(res)
-            for f, v in res.items():
-                if p.fields[f].role.value == "output":
-                    outputs[f] = v
-        return outputs
+                             for a in range(ndim))
+                return jnp.pad(env[f], pads), None  # transient inter-group
+
+            outputs = _run_groups(p, calls, svec, pc_per_call, resolve)
+            cur = {f: carry[f][interior[f]] for f in spec.persistent}
+            new = dict(cur)
+            new.update(update(cur, outputs))
+            if spec.carry_write == "inplace":
+                return {f: carry[f].at[interior[f]].set(
+                            jnp.asarray(new[f], dtype=dtype))
+                        for f in spec.persistent}
+            # "repad": the halo slabs are constant zeros, so the back buffer
+            # is one fused interior write + constant halo — no carry RMW
+            return {f: jnp.pad(jnp.asarray(new[f], dtype=dtype),
+                               carry_pads[f])
+                    for f in spec.persistent}
+
+        carry = jax.lax.fori_loop(0, spec.steps, body, carry)
+        return {f: carry[f][interior[f]] for f in spec.persistent}
 
     return run

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 
 from . import lower_jnp, lower_pallas
 from .ir import Program
-from .schedule import DataflowPlan, auto_plan
+from .schedule import DataflowPlan, TimeLoopSpec, auto_plan, plan_time_loop
 
 
 @dataclasses.dataclass
@@ -32,6 +32,9 @@ class CompiledStencil:
     grid: tuple
     _fn: object
     jitted: bool
+    # fused time loop (``steps=N``): the executable returns the *final
+    # fields* after N on-device iterations instead of one step's outputs
+    time_spec: TimeLoopSpec | None = None
 
     def __call__(self, fields: Mapping, scalars: Mapping | None = None,
                  coeffs: Mapping | None = None) -> dict:
@@ -41,7 +44,18 @@ class CompiledStencil:
 def compile_program(p: Program, grid, *, backend: str = "pallas",
                     plan: DataflowPlan | None = None, jit: bool = True,
                     interpret: bool = True, dtype: str = "float32",
-                    strategy: str = "auto") -> CompiledStencil:
+                    strategy: str = "auto", steps: int | None = None,
+                    update=None, carry_write: str = "repad") -> CompiledStencil:
+    """Compile ``p`` for ``grid``.
+
+    With ``steps=N`` and an ``update(fields, outputs) -> fields`` rule, the
+    whole time loop is lowered into the compiled program (one ``jax.jit``
+    dispatch per call): the loop carry keeps the input fields resident and
+    pre-padded on device, and ``update`` is traced into the loop body.  The
+    executable then maps initial fields to the fields after N steps —
+    exactly N iterations of :func:`run_time_loop`, without N dispatches,
+    N ``jnp.pad`` rounds, or N host round trips.
+    """
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
         raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
@@ -50,7 +64,22 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
                          dtype=dtype, strategy=strategy)
     plan.backend = backend
 
-    if backend == "pallas":
+    time_spec = None
+    if steps is not None:
+        if update is None:
+            raise ValueError("steps=N requires an update(fields, outputs) "
+                             "rule to close the time loop")
+        time_spec = plan_time_loop(p, plan, grid, steps,
+                                   carry_write=carry_write)
+        if backend == "pallas":
+            raw = lower_pallas.lower_time_loop(p, plan, grid, time_spec,
+                                               update)
+        elif backend in ("jnp_fused", "jnp_naive"):
+            raw = lower_jnp.lower_time_loop(p, backend.removeprefix("jnp_"),
+                                            time_spec, update)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+    elif backend == "pallas":
         raw = lower_pallas.lower(p, plan, grid)
     elif backend == "jnp_fused":
         raw = lower_jnp.lower(p, mode="fused")
@@ -60,7 +89,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         raise ValueError(f"unknown backend {backend!r}")
 
     fn = jax.jit(raw) if jit else raw
-    return CompiledStencil(program=p, plan=plan, grid=grid, _fn=fn, jitted=jit)
+    return CompiledStencil(program=p, plan=plan, grid=grid, _fn=fn,
+                           jitted=jit, time_spec=time_spec)
 
 
 def run_time_loop(ex: CompiledStencil, fields: dict, scalars: dict,

@@ -23,7 +23,7 @@ import numpy as np
 
 from .. import hw
 from .ir import Program
-from .passes import infer_halo, stage_split
+from .passes import _zeros, infer_halo, stage_split
 
 
 @dataclasses.dataclass
@@ -47,6 +47,110 @@ class DataflowPlan:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
         return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
                 f"mesh_axes={self.mesh_axes})")
+
+
+@dataclasses.dataclass
+class TimeLoopSpec:
+    """Plan for a fused on-device time loop (the paper's device-resident
+    inter-iteration dataflow, §3.3 step 3 applied to the *time* axis).
+
+    The loop carry holds one persistent, halo-padded buffer per program
+    input field; each step reads stencil windows straight out of the carry
+    (no per-step ``jnp.pad``), and the traced update rule writes the new
+    interior back in place.  Per fuse group, ``double_buffer`` assigns a
+    front/back slot pair per persistent field: the group reads the front
+    slot, the update writes the back slot, and parity swaps every step —
+    the functional lowering realises the swap through XLA buffer donation
+    on the loop carry.
+    """
+
+    steps: int
+    # fields carried across steps (the program's external inputs)
+    persistent: list
+    # field -> (ndim, 2) carry padding [halo + tile alignment on the hi side]
+    field_pad: dict
+    # field -> (front_slot, back_slot) logical buffer ids
+    double_buffer: dict
+    # per fuse group: {field: (ndim,) int start offsets of the group's
+    # expected window inside the carry buffer} (0 for transient inputs)
+    group_offsets: list
+    # how the loop body writes the back buffer:
+    #   "repad"   — rebuild interior + constant zero halo in one fused write
+    #               (zero-halo slabs are constants; fastest on XLA:CPU, which
+    #               lowers the in-place form to a full read-modify-write)
+    #   "inplace" — scatter the new interior into the carry
+    #               (dynamic-update-slice; aliases on TPU)
+    carry_write: str = "repad"
+
+    def describe(self) -> str:
+        bufs = ", ".join(f"{f}:{a}/{b}" for f, (a, b)
+                         in self.double_buffer.items())
+        return (f"time_loop(steps={self.steps}, "
+                f"persistent=[{','.join(self.persistent)}], "
+                f"double_buffer=[{bufs}])")
+
+
+def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
+                   steps: int, carry_write: str = "repad") -> TimeLoopSpec:
+    """Size the carry buffers for a fused time loop.
+
+    For the Pallas backend a field's carry padding is the elementwise max of
+    the window halos of every fuse group consuming it, plus the lane-tile
+    alignment padding on the hi side (so any group can slice its expected
+    window geometry out of the carry without reallocating).  The jnp
+    backends share the same spec minus alignment.
+    """
+    grid = tuple(int(g) for g in grid)
+    ndim = p.ndim
+    steps = int(steps)
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    persistent = p.input_fields()
+
+    align_hi = np.zeros(ndim, dtype=np.int64)
+    if plan.backend == "pallas":
+        # mirror build_group_call's tile geometry exactly
+        block = tuple(min(int(b), g) for b, g in zip(plan.block[:ndim], grid))
+        tiles = tuple(-(-grid[a] // block[a]) for a in range(ndim))
+        align_hi = np.asarray([tiles[a] * block[a] - grid[a]
+                               for a in range(ndim)], dtype=np.int64)
+
+    field_pad = {f: _zeros(ndim) for f in persistent}
+    group_halos = [infer_halo(p, grp) for grp in plan.groups]
+    for gh in group_halos:
+        for f in gh.group_inputs:
+            if f in field_pad:
+                field_pad[f] = np.maximum(field_pad[f], gh.input_halo)
+    # the jnp lowerings evaluate every op (no DCE), so the carry must also
+    # cover raw access offsets from ops outside the live fuse groups
+    for op in p.ops:
+        for a in op.accesses():
+            m = field_pad.get(a.field)
+            if m is None:
+                continue
+            for ax in range(ndim):
+                o = int(a.offset[ax])
+                m[ax, 0] = max(m[ax, 0], -o)
+                m[ax, 1] = max(m[ax, 1], o)
+    for f in persistent:
+        field_pad[f][:, 1] += align_hi
+
+    double_buffer = {f: (2 * i, 2 * i + 1) for i, f in enumerate(persistent)}
+    group_offsets = []
+    for gh in group_halos:
+        offs = {}
+        for f in gh.group_inputs:
+            if f in field_pad:
+                offs[f] = tuple(int(field_pad[f][a, 0] - gh.input_halo[a, 0])
+                                for a in range(ndim))
+            else:
+                offs[f] = (0,) * ndim
+        group_offsets.append(offs)
+    if carry_write not in ("repad", "inplace"):
+        raise ValueError(f"unknown carry_write {carry_write!r}")
+    return TimeLoopSpec(steps=steps, persistent=persistent,
+                        field_pad=field_pad, double_buffer=double_buffer,
+                        group_offsets=group_offsets, carry_write=carry_write)
 
 
 def _dtype_bytes(dtype: str) -> int:

@@ -1,0 +1,5 @@
+# Distribution substrate: sharding rules shared by the LM stack (train,
+# serve, dry-run) and consulted by the stencil distributed executor.
+from .sharding import (ShardingRules, activation_context, batch_sharding,
+                       cache_specs, make_auto_mesh, named_shardings,
+                       param_specs, shard_activation)

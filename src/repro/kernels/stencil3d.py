@@ -43,8 +43,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 try:  # Element block dims: public in newer JAX, core in 0.8.x
     from jax.experimental.pallas import Element  # type: ignore
+
+    def _window_spec(shape, index_map):
+        return pl.BlockSpec(tuple(Element(s) for s in shape), index_map)
 except ImportError:  # pragma: no cover
-    from jax._src.pallas.core import Element
+    try:
+        from jax._src.pallas.core import Element  # type: ignore
+
+        def _window_spec(shape, index_map):
+            return pl.BlockSpec(tuple(Element(s) for s in shape), index_map)
+    except ImportError:
+        # jax 0.4.x: Unblocked indexing takes element offsets directly,
+        # which is exactly what the overlapping-window maps emit.
+        def _window_spec(shape, index_map):
+            return pl.BlockSpec(tuple(shape), index_map,
+                                indexing_mode=pl.Unblocked())
 
 from ..core.expr_eval import evaluate
 from ..core.ir import Access, FieldRole, Program
@@ -170,12 +183,12 @@ def build_group_call(p: Program, group: Sequence[int], block: Sequence[int],
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),   # scalars
                 pl.BlockSpec(memory_space=pltpu.SMEM)]   # origin
     for _ in gh.group_inputs:
-        in_specs.append(pl.BlockSpec(
-            tuple(Element(win[a]) for a in range(ndim)), window_map))
+        in_specs.append(_window_spec(
+            tuple(win[a] for a in range(ndim)), window_map))
     for c in gh.group_coeffs:
         ax = coeff_axis[c]
-        in_specs.append(pl.BlockSpec(
-            (Element(win[ax]),),
+        in_specs.append(_window_spec(
+            (win[ax],),
             (lambda *idx, ax=ax: (idx[ax] * block[ax],))))
     out_specs = tuple(pl.BlockSpec(block, lambda *idx: tuple(idx))
                       for _ in out_names)
@@ -192,15 +205,31 @@ def build_group_call(p: Program, group: Sequence[int], block: Sequence[int],
 
     crop = tuple(slice(0, grid_shape[a]) for a in range(ndim))
 
+    expect = tuple(halo_lo[a] + padded_out[a] + halo_hi[a]
+                   for a in range(ndim))
+
     def run(padded_inputs: dict, scalars_vec=None,
-            padded_coeffs: dict | None = None, origin=None):
+            padded_coeffs: dict | None = None, origin=None,
+            input_pad: dict | None = None):
+        """``input_pad[f]`` gives the (ndim, 2) padding the provided array
+        actually carries when it exceeds this group's window geometry —
+        e.g. a fused time loop's carry-resident persistent buffer sized for
+        the worst consuming group.  The window is sliced out statically; no
+        reallocation or copy of the halo slabs happens here."""
         svec = (scalars_vec if scalars_vec is not None
                 else jnp.zeros((max(n_scalars, 1),), jnp.float32))
         org = (origin if origin is not None
                else jnp.zeros((ndim,), jnp.int32))
         args = [svec, org]
         for f in gh.group_inputs:
-            args.append(padded_inputs[f])
+            x = padded_inputs[f]
+            if input_pad is not None and f in input_pad:
+                ip = input_pad[f]
+                sl = tuple(slice(int(ip[a][0]) - halo_lo[a],
+                                 int(ip[a][0]) - halo_lo[a] + expect[a])
+                           for a in range(ndim))
+                x = x[sl]
+            args.append(x)
         for c in gh.group_coeffs:
             args.append(padded_coeffs[c])
         res = call(*args)

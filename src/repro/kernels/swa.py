@@ -30,8 +30,21 @@ from jax.experimental.pallas import tpu as pltpu
 
 try:
     from jax.experimental.pallas import Element  # type: ignore
+
+    def _kv_spec(slab, D, index_map):
+        return pl.BlockSpec((1, 1, Element(slab), Element(D)), index_map)
 except ImportError:  # pragma: no cover
-    from jax._src.pallas.core import Element
+    try:
+        from jax._src.pallas.core import Element  # type: ignore
+
+        def _kv_spec(slab, D, index_map):
+            return pl.BlockSpec((1, 1, Element(slab), Element(D)), index_map)
+    except ImportError:
+        # jax 0.4.x: fully element-indexed spec; the leading dims have block
+        # size 1, so their element offsets coincide with block indices.
+        def _kv_spec(slab, D, index_map):
+            return pl.BlockSpec((1, 1, slab, D), index_map,
+                                indexing_mode=pl.Unblocked())
 
 
 def swa_pallas(q, k, v, *, window: int, q_block: int = 128,
@@ -84,10 +97,8 @@ def swa_pallas(q, k, v, *, window: int, q_block: int = 128,
         grid=(B, H, nq),
         in_specs=[
             pl.BlockSpec((1, 1, Bq, D), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, Element(slab), Element(D)),
-                         lambda b, h, i: (b, h, i * Bq, 0)),
-            pl.BlockSpec((1, 1, Element(slab), Element(D)),
-                         lambda b, h, i: (b, h, i * Bq, 0)),
+            _kv_spec(slab, D, lambda b, h, i: (b, h, i * Bq, 0)),
+            _kv_spec(slab, D, lambda b, h, i: (b, h, i * Bq, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, Bq, D), lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),

@@ -13,14 +13,13 @@ from __future__ import annotations
 
 import jax
 
-from ..dist.sharding import ShardingRules
+from ..dist.sharding import ShardingRules, make_auto_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_auto_mesh(shape, axes)
 
 
 def make_rules(mesh, *, kind: str = "train", variant: str = "baseline",

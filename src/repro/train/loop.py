@@ -131,6 +131,15 @@ class Trainer:
             self.state["params"] = jax.device_put(self.state["params"], ps)
 
     def run(self, steps: int):
+        try:
+            return self._run(steps)
+        finally:
+            # join the async writer even when a step raises: a checkpoint
+            # whose write began before the failure must be durable for the
+            # restarted job to resume from it.
+            self.ckpt.wait()
+
+    def _run(self, steps: int):
         bs = (batch_sharding(self.rules) if self.rules is not None else None)
         for step in range(self.step, self.step + steps):
             if self.fail_at_step is not None and step == self.fail_at_step:
@@ -156,6 +165,5 @@ class Trainer:
             nxt = step + 1
             if nxt % self.tcfg.ckpt_every == 0:
                 self.ckpt.save(nxt, self.state, {"next_step": nxt})
-        self.ckpt.wait()
         self.step = self.step + steps
         return self.history

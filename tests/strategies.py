@@ -4,12 +4,21 @@ The random generator fuzzes the whole compiler: random expression trees over
 random fields with offsets in [-2, 2], optional scalars/coeffs, and random
 producer->consumer chains — the property is that every backend agrees with
 the jnp_naive oracle.
+
+``make_data`` has no hypothesis dependency; the ``programs``/``expr_trees``
+strategies are only defined when the test extra is installed, so plain test
+modules can import this file in a bare environment.
 """
 
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core.frontend import ProgramBuilder
 from repro.core.ir import (Access, BinOp, BinOpKind, CoeffRef, Const, Expr,
@@ -29,67 +38,70 @@ def make_data(p, grid, seed=0, dtype=np.float32):
     return fields, scalars, coeffs
 
 
-@st.composite
-def expr_trees(draw, readable, scalars, coeffs, ndim, depth=3):
-    """Random expression over readable field names."""
-    if depth == 0 or draw(st.integers(0, 3)) == 0:
-        choice = draw(st.integers(0, 3))
-        if choice == 0 and scalars:
-            return ScalarRef(draw(st.sampled_from(scalars)))
-        if choice == 1 and coeffs:
-            return CoeffRef(draw(st.sampled_from(coeffs)),
-                            draw(st.integers(-1, 1)))
-        if choice == 2:
-            return Const(float(draw(st.integers(-3, 3))))
-        off = tuple(draw(st.integers(-2, 2)) for _ in range(ndim))
-        return Access(draw(st.sampled_from(readable)), off)
-    kind = draw(st.integers(0, 2))
-    if kind == 0:
-        return BinOp(draw(st.sampled_from(SAFE_BIN)),
-                     draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)),
-                     draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)))
-    if kind == 1:
-        return UnOp(draw(st.sampled_from(SAFE_UN)),
-                    draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)))
-    return Select(
-        Cmp(CmpKind.GT,
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def expr_trees(draw, readable, scalars, coeffs, ndim, depth=3):
+        """Random expression over readable field names."""
+        if depth == 0 or draw(st.integers(0, 3)) == 0:
+            choice = draw(st.integers(0, 3))
+            if choice == 0 and scalars:
+                return ScalarRef(draw(st.sampled_from(scalars)))
+            if choice == 1 and coeffs:
+                return CoeffRef(draw(st.sampled_from(coeffs)),
+                                draw(st.integers(-1, 1)))
+            if choice == 2:
+                return Const(float(draw(st.integers(-3, 3))))
+            off = tuple(draw(st.integers(-2, 2)) for _ in range(ndim))
+            return Access(draw(st.sampled_from(readable)), off)
+        kind = draw(st.integers(0, 2))
+        if kind == 0:
+            return BinOp(draw(st.sampled_from(SAFE_BIN)),
+                         draw(expr_trees(readable, scalars, coeffs, ndim,
+                                         depth - 1)),
+                         draw(expr_trees(readable, scalars, coeffs, ndim,
+                                         depth - 1)))
+        if kind == 1:
+            return UnOp(draw(st.sampled_from(SAFE_UN)),
+                        draw(expr_trees(readable, scalars, coeffs, ndim,
+                                        depth - 1)))
+        return Select(
+            Cmp(CmpKind.GT,
+                draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)),
+                Const(0.0)),
             draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)),
-            Const(0.0)),
-        draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)),
-        draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)))
+            draw(expr_trees(readable, scalars, coeffs, ndim, depth - 1)))
 
+    @st.composite
+    def programs(draw, ndim=None):
+        """Random stencil programs with dependency chains."""
+        if ndim is None:
+            ndim = draw(st.integers(1, 3))
+        n_in = draw(st.integers(1, 3))
+        n_ops = draw(st.integers(1, 5))
+        n_scalars = draw(st.integers(0, 2))
+        n_coeffs = draw(st.integers(0, 1)) if ndim >= 1 else 0
 
-@st.composite
-def programs(draw, ndim=None):
-    """Random stencil programs with dependency chains."""
-    if ndim is None:
-        ndim = draw(st.integers(1, 3))
-    n_in = draw(st.integers(1, 3))
-    n_ops = draw(st.integers(1, 5))
-    n_scalars = draw(st.integers(0, 2))
-    n_coeffs = draw(st.integers(0, 1)) if ndim >= 1 else 0
+        b = ProgramBuilder("fuzz", ndim=ndim)
+        ins = [b.input(f"in{i}") for i in range(n_in)]
+        scalars = [f"s{i}" for i in range(n_scalars)]
+        for s in scalars:
+            b.scalar(s)
+        coeffs = []
+        if n_coeffs:
+            ax = draw(st.integers(0, ndim - 1))
+            b.coeff("cf0", axis=ax)
+            coeffs = ["cf0"]
 
-    b = ProgramBuilder("fuzz", ndim=ndim)
-    ins = [b.input(f"in{i}") for i in range(n_in)]
-    scalars = [f"s{i}" for i in range(n_scalars)]
-    for s in scalars:
-        b.scalar(s)
-    coeffs = []
-    if n_coeffs:
-        ax = draw(st.integers(0, ndim - 1))
-        b.coeff("cf0", axis=ax)
-        coeffs = ["cf0"]
-
-    readable = [f"in{i}" for i in range(n_in)]
-    outs = []
-    for i in range(n_ops):
-        # last op must be an output; earlier ones may be temps
-        is_out = (i == n_ops - 1) or draw(st.booleans())
-        name = f"o{i}"
-        h = b.output(name) if is_out else b.temp(name)
-        expr = draw(expr_trees(readable, scalars, coeffs, ndim,
-                               depth=draw(st.integers(1, 3))))
-        b.define(h, expr)
-        readable.append(name)
-        outs.append(name)
-    return b.build()
+        readable = [f"in{i}" for i in range(n_in)]
+        outs = []
+        for i in range(n_ops):
+            # last op must be an output; earlier ones may be temps
+            is_out = (i == n_ops - 1) or draw(st.booleans())
+            name = f"o{i}"
+            h = b.output(name) if is_out else b.temp(name)
+            expr = draw(expr_trees(readable, scalars, coeffs, ndim,
+                                   depth=draw(st.integers(1, 3))))
+            b.define(h, expr)
+            readable.append(name)
+            outs.append(name)
+        return b.build()

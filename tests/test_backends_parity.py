@@ -8,14 +8,22 @@ computes exactly the mathematics of the IR.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, HealthCheck
+
+try:  # property fuzzing needs the test extra; plain parity tests don't
+    from hypothesis import given, settings, HealthCheck
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.apps import pw_advection, tracer_advection
 from repro.core import compile_program
 from repro.core.schedule import DataflowPlan, auto_plan
 from repro.core.passes import stage_split
 
-from strategies import make_data, programs
+from strategies import make_data
+
+if HAVE_HYPOTHESIS:
+    from strategies import programs
 
 
 def physical_data(p, grid, seed=0):
@@ -94,25 +102,26 @@ def test_bfloat16_dtype():
 
 # ------------------------------------------------------------ property tests
 
-@settings(max_examples=25, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(p=programs())
-def test_property_random_programs_pallas_matches_oracle(p):
-    grid = {1: (24,), 2: (10, 32), 3: (6, 8, 32)}[p.ndim]
-    check_parity(p, grid, atol=1e-3, rtol=1e-3)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(p=programs())
+    def test_property_random_programs_pallas_matches_oracle(p):
+        grid = {1: (24,), 2: (10, 32), 3: (6, 8, 32)}[p.ndim]
+        check_parity(p, grid, atol=1e-3, rtol=1e-3)
 
-
-@settings(max_examples=10, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(p=programs(ndim=3))
-def test_property_per_field_equals_fused(p):
-    """Paper step 4: the per-field dataflow split must not change results."""
-    grid = (6, 8, 32)
-    fields, scalars, coeffs = make_data(p, grid, seed=3)
-    a = compile_program(p, grid, backend="pallas",
-                        strategy="fused")(fields, scalars, coeffs)
-    b = compile_program(p, grid, backend="pallas",
-                        strategy="per_field")(fields, scalars, coeffs)
-    for k in a:
-        np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
-                                   atol=1e-3, rtol=1e-3)
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(p=programs(ndim=3))
+    def test_property_per_field_equals_fused(p):
+        """Paper step 4: the per-field dataflow split must not change
+        results."""
+        grid = (6, 8, 32)
+        fields, scalars, coeffs = make_data(p, grid, seed=3)
+        a = compile_program(p, grid, backend="pallas",
+                            strategy="fused")(fields, scalars, coeffs)
+        b = compile_program(p, grid, backend="pallas",
+                            strategy="per_field")(fields, scalars, coeffs)
+        for k in a:
+            np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                       atol=1e-3, rtol=1e-3)

@@ -12,11 +12,11 @@ import pytest
 
 SCRIPT = r"""
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.apps import pw_advection, tracer_advection
 from repro.core import compile_program
 from repro.core.frontend import ProgramBuilder
 from repro.core.distribute import make_sharded_executor
+from repro.dist.sharding import make_auto_mesh
 
 rng = np.random.default_rng(7)
 
@@ -30,7 +30,7 @@ def data(p, grid):
     return fields, scalars, coeffs
 
 def check(p, grid, mesh_shape, names, mesh_axes):
-    mesh = jax.make_mesh(mesh_shape, names, axis_types=(AxisType.Auto,)*len(names))
+    mesh = make_auto_mesh(mesh_shape, names)
     fields, scalars, coeffs = data(p, grid)
     ref = compile_program(p, grid, backend="jnp_naive")(fields, scalars, coeffs)
     out = make_sharded_executor(p, grid, mesh, mesh_axes)(fields, scalars, coeffs)

@@ -18,12 +18,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, jax
 from repro.configs import get_smoke
 from repro.configs.base import ShapeConfig
-from repro.dist.sharding import ShardingRules
+from repro.dist.sharding import ShardingRules, make_auto_mesh
 from repro.launch.specs import build_step
 from repro.analysis.roofline import parse_collectives
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_auto_mesh((2, 4), ("data", "model"))
 
 CASES = [
     ("h2o_danube_1_8b", ShapeConfig("train", 64, 8, "train"), "train"),
@@ -46,6 +45,8 @@ for arch, shape, kind in CASES:
     mem = compiled.memory_analysis()
     assert mem.temp_size_in_bytes >= 0
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax 0.4.x: one dict per module
+        cost = cost[0]
     assert cost.get("flops", 0) > 0
     coll = parse_collectives(compiled.as_text())
     print(f"{arch} {shape.kind}: ok, {len(coll)} collectives")

@@ -8,8 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # property fuzzing needs the test extra; the rest of the module doesn't
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)
@@ -149,17 +154,18 @@ def test_grad_accumulation_matches_large_batch():
     assert max(jax.tree.leaves(d)) < 5e-3
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_property_compression_error_feedback_bounded(seed):
-    """EF invariant: residual stays bounded by one quantisation bucket."""
-    rng = np.random.default_rng(seed)
-    g = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10))
-    err = jnp.zeros_like(g)
-    for _ in range(5):
-        deq, err = compress_decompress(g, err)
-        scale = float(jnp.max(jnp.abs(g + err))) / 127.0
-        assert float(jnp.max(jnp.abs(err))) <= scale * 0.5 + 1e-6
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_property_compression_error_feedback_bounded(seed):
+        """EF invariant: residual stays bounded by one quantisation bucket."""
+        rng = np.random.default_rng(seed)
+        g = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.1, 10))
+        err = jnp.zeros_like(g)
+        for _ in range(5):
+            deq, err = compress_decompress(g, err)
+            scale = float(jnp.max(jnp.abs(g + err))) / 127.0
+            assert float(jnp.max(jnp.abs(err))) <= scale * 0.5 + 1e-6
 
 
 def test_straggler_deadline_counts():
