@@ -9,6 +9,11 @@ Run:  PYTHONPATH=src python -m benchmarks.run
 ``--smoke`` runs a CI-sized subset instead (tiny grid, a few steps, all
 three backends incl. pallas interpret) and writes the rows to a
 ``BENCH_*.json`` artifact so the perf trajectory accumulates per commit.
+
+``--tune`` runs the measured plan search (repro.core.tune) on the same
+CI-sized problem and emits tuned-vs-``auto_plan`` rows per backend, so the
+artifact trail records the tuner's wins per commit; the winning plans are
+persisted to the JSON plan cache at ``--plan-cache``.
 """
 
 from __future__ import annotations
@@ -57,6 +62,54 @@ def run_smoke(out_path: str) -> None:
     print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
 
 
+def run_tune(out_path: str, cache_path: str) -> None:
+    """Measured plan search on the smoke problem (16^3 x 3 steps, all three
+    backends, pruned candidate set) -> tuned-vs-auto_plan rows + plan cache."""
+    from repro.apps import pw_advection, pw_advection_update
+    from repro.core import tune_plan, TuneConfig, PlanCache
+
+    grid, steps = (16, 16, 16), 3
+    p = pw_advection()
+    cfg = TuneConfig(steps=steps, repeats=2, max_measured=4)
+    cache = PlanCache(path=cache_path)
+    tag = "x".join(map(str, grid))
+    rows = []
+
+    def emit_row(name: str, us: float, derived: str = ""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us": round(us, 2), "derived": derived})
+
+    for backend in ("jnp_naive", "jnp_fused", "pallas"):
+        res = tune_plan(p, grid, backend=backend,
+                        update=pw_advection_update(0.1), config=cfg,
+                        cache=cache)
+        base = res.baseline
+        emit_row(f"tune/{p.name}/{tag}/{backend}/auto_plan",
+                 base.us_fused, f"{steps / (base.us_fused * 1e-6):.2f} steps/s")
+        emit_row(f"tune/{p.name}/{tag}/{backend}/tuned",
+                 res.record["us_fused"],
+                 f"{steps / (res.record['us_fused'] * 1e-6):.2f} steps/s "
+                 f"[{res.record['label']}]")
+        emit_row(f"tune/{p.name}/{tag}/{backend}/speedup", 0.0,
+                 f"{base.us_fused / res.record['us_fused']:.2f}x tuned vs "
+                 f"auto_plan ({res.record['measured']} of "
+                 f"{res.record['candidates']} candidates measured)")
+    doc = {
+        "kind": "bench_tune",
+        "grid": list(grid),
+        "steps": steps,
+        "time": time.time(),
+        "platform": platform.platform(),
+        "commit": os.environ.get("GITHUB_SHA", ""),
+        "plan_cache": cache_path,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path} ({len(rows)} rows); plan cache -> {cache_path}",
+          flush=True)
+
+
 def lm_roofline_summary(emit):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     for f in files:
@@ -78,13 +131,22 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized fused-loop benchmark, writes a JSON "
                          "artifact instead of the full paper sweep")
-    ap.add_argument("--out", default="BENCH_smoke.json",
-                    help="artifact path for --smoke")
+    ap.add_argument("--tune", action="store_true",
+                    help="CI-sized measured plan search: tuned-vs-auto_plan "
+                         "rows per backend + persistent plan cache")
+    ap.add_argument("--out", default=None,
+                    help="artifact path for --smoke / --tune "
+                         "(default BENCH_smoke.json / BENCH_tune_smoke.json)")
+    ap.add_argument("--plan-cache", default="PLAN_CACHE_smoke.json",
+                    help="plan-cache path for --tune")
     args = ap.parse_args()
 
     emit("bench/header", 0.0, "name,us_per_call,derived")
+    if args.tune:
+        run_tune(args.out or "BENCH_tune_smoke.json", args.plan_cache)
+        return
     if args.smoke:
-        run_smoke(args.out)
+        run_smoke(args.out or "BENCH_smoke.json")
         return
     fig4_throughput.run(emit)
     fig5_6_energy.run(emit)

@@ -24,7 +24,7 @@ import dataclasses
 import numpy as np
 
 from .. import hw
-from ..core.ir import Program
+from ..core.ir import Program, count_flops
 from ..core.passes import infer_halo, live_ops, stage_split
 
 # v5e vector unit f32 throughput (8x128 lanes x FMA x ~0.94 GHz) — estimate
@@ -75,6 +75,50 @@ def model_program(p: Program, dtype_bytes: int = 4) -> StencilModel:
         mpts[k] = 1e-6 / max(t_mem, t_cmp)
     return StencilModel(flops_per_point=fl, bytes_per_point=bytes_pp,
                         mpts_chip=mpts)
+
+
+def model_plan(p: Program, plan, grid) -> float:
+    """Modeled seconds per time step for one *specific* plan (tuner pruner).
+
+    :func:`model_program` prices the three backend roles; this prices a
+    candidate :class:`~repro.core.schedule.DataflowPlan`'s actual geometry so
+    the tuner can rank candidates *before* paying for a measurement:
+
+    * each fuse-group input is fetched as an overlapping window, so its HBM
+      traffic carries the halo overhead ``prod(window) / prod(block)`` — a
+      small block on a wide halo re-reads the overlap every tile;
+    * in-group producer->consumer recompute (overlapped tiling) inflates the
+      flop count by each op's margin-extended evaluation volume.
+
+    The jnp backends ignore block shape and fuse groups, so their candidates
+    collapse to the backend-level bytes/point of :func:`model_program`.
+    """
+    pts = float(np.prod([int(g) for g in grid]))
+    bs = hw.DTYPE_BYTES[plan.dtype]
+    if plan.backend != "pallas":
+        m = model_program(p, dtype_bytes=bs)
+        return pts / (m.mpts(plan.backend) * 1e6)
+
+    ndim = p.ndim
+    blk = np.minimum(np.asarray(plan.block[:ndim], dtype=np.int64),
+                     np.asarray([int(g) for g in grid], dtype=np.int64))
+    blk = np.maximum(blk, 1)
+    bytes_pp = 0.0
+    flops_pp = 0.0
+    for grp in plan.groups:
+        gh = infer_halo(p, grp)
+        win = blk + gh.input_halo[:, 0] + gh.input_halo[:, 1]
+        overhead = float(np.prod(win)) / float(np.prod(blk))
+        bytes_pp += len(gh.group_inputs) * overhead * bs
+        bytes_pp += len(gh.group_outputs) * bs
+        for i in grp:
+            m = gh.margins[i]
+            ext = blk + m[:, 0] + m[:, 1]
+            recompute = float(np.prod(ext)) / float(np.prod(blk))
+            flops_pp += count_flops(p.ops[i].expr) * recompute
+    t_mem = bytes_pp * pts / hw.TPU_V5E.hbm_bandwidth
+    t_cmp = flops_pp * pts / VPU_F32_FLOPS
+    return max(t_mem, t_cmp)
 
 
 def modeled_energy_j(points: float, mpts: float,

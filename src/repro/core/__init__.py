@@ -5,4 +5,6 @@ from .frontend import (CoeffHandle, ExprHandle, FieldHandle, ProgramBuilder,
                        tanh, where)
 from .ir import Program
 from .pipeline import CompiledStencil, compile_program, run_time_loop
-from .schedule import DataflowPlan, TimeLoopSpec, auto_plan, plan_time_loop
+from .schedule import (DataflowPlan, TimeLoopSpec, auto_plan, plan_from_dict,
+                       plan_time_loop, plan_to_dict, program_fingerprint)
+from .tune import PlanCache, TuneConfig, TuneResult, get_tuned_plan, tune_plan

@@ -160,6 +160,14 @@ def field_halo(p: Program) -> np.ndarray:
 # 4. stage splitting / fusion grouping
 # --------------------------------------------------------------------------
 
+#: Max recompute margin the ``auto`` strategy tolerates before cutting a fuse
+#: group (≈ a halo-1 producer->consumer chain of depth 6).  Beyond this the
+#: overlapped-tiling recompute volume grows faster than the HBM traffic a
+#: larger group saves.
+RECOMPUTE_MARGIN_CAP = 6
+
+STAGE_SPLIT_STRATEGIES = ("fused", "per_field", "auto")
+
 def live_ops(p: Program) -> list:
     """Dead-code elimination: op indices transitively feeding a stored output."""
     producer = {op.out: i for i, op in enumerate(p.ops)}
@@ -194,7 +202,9 @@ def stage_split(p: Program, strategy: str = "auto") -> list:
     if strategy == "fused":
         return [alive]
     if strategy != "auto":
-        raise ValueError(strategy)
+        raise ValueError(
+            f"unknown stage_split strategy {strategy!r}; valid strategies: "
+            + ", ".join(repr(s) for s in STAGE_SPLIT_STRATEGIES))
     # auto: greedily grow a group; cut when max margin exceeds threshold
     groups: list = []
     cur: list = []
@@ -202,7 +212,7 @@ def stage_split(p: Program, strategy: str = "auto") -> list:
         trial = cur + [i]
         gh = infer_halo(p, trial)
         worst = max((int(m.max()) for m in gh.margins.values()), default=0)
-        if cur and worst > 6:  # recompute margin cap (≈ halo 1 chain depth 6)
+        if cur and worst > RECOMPUTE_MARGIN_CAP:
             groups.append(cur)
             cur = [i]
         else:

@@ -45,7 +45,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
                     plan: DataflowPlan | None = None, jit: bool = True,
                     interpret: bool = True, dtype: str = "float32",
                     strategy: str = "auto", steps: int | None = None,
-                    update=None, carry_write: str = "repad") -> CompiledStencil:
+                    update=None, carry_write: str | None = None,
+                    tune_config=None, plan_cache=None) -> CompiledStencil:
     """Compile ``p`` for ``grid``.
 
     With ``steps=N`` and an ``update(fields, outputs) -> fields`` rule, the
@@ -55,14 +56,34 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
     executable then maps initial fields to the fields after N steps —
     exactly N iterations of :func:`run_time_loop`, without N dispatches,
     N ``jnp.pad`` rounds, or N host round trips.
+
+    ``strategy="tuned"`` replaces the ``auto_plan`` heuristic with the
+    measured search of :mod:`repro.core.tune`: the persistent plan cache is
+    consulted first (a hit compiles the stored plan with zero timed runs);
+    on a miss the tuner measures model-pruned candidates and persists the
+    winner.  ``tune_config`` (:class:`~repro.core.tune.TuneConfig`) and
+    ``plan_cache`` (:class:`~repro.core.tune.PlanCache`) override the search
+    knobs and cache location.  ``carry_write=None`` defers to the tuned
+    style (or ``"repad"`` under any other strategy).
     """
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
         raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
+    tuned_cw = None
     if plan is None:
-        plan = auto_plan(p, grid, backend=backend, interpret=interpret,
-                         dtype=dtype, strategy=strategy)
+        if strategy == "tuned":
+            from . import tune
+            res = tune.get_tuned_plan(p, grid, backend=backend,
+                                      interpret=interpret, dtype=dtype,
+                                      update=update, config=tune_config,
+                                      cache=plan_cache)
+            plan, tuned_cw = res.plan, res.carry_write
+        else:
+            plan = auto_plan(p, grid, backend=backend, interpret=interpret,
+                             dtype=dtype, strategy=strategy, steps=steps)
     plan.backend = backend
+    if carry_write is None:
+        carry_write = tuned_cw or "repad"
 
     time_spec = None
     if steps is not None:

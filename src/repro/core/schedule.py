@@ -10,12 +10,15 @@ unroll, array_partition, AXI bundles), the plan records their TPU analogues:
   hls.interface / bundles       ->  PartitionSpec per field (chips = banks)
 
 A plan is pure data: both backends and the distributed executor consume it,
-and the hillclimb loop mutates it.
+the auto-tuner (:mod:`repro.core.tune`) searches over it by measurement, and
+:func:`plan_to_dict` / :func:`plan_from_dict` round-trip it through the
+tuner's persistent JSON plan cache.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Sequence
 
@@ -38,15 +41,73 @@ class DataflowPlan:
     backend: str = "pallas"
     # run pallas in interpret mode (CPU container) — real runs set False
     interpret: bool = True
-    # distributed layout: mesh axis name per grid axis (None = unsharded)
-    mesh_axes: tuple = (None, None, None)
+    # distributed layout: mesh axis name per grid axis (None entry =
+    # unsharded axis).  ``None`` means fully unsharded; stored tuples are
+    # normalised to the program's ndim via :meth:`mesh_axes_for` rather than
+    # assuming 3-D (2-D programs get 2-tuples).
+    mesh_axes: tuple | None = None
     # exchange halos every k steps with k-wide halos (comm amortisation)
     halo_every: int = 1
 
+    def __post_init__(self):
+        if self.mesh_axes is not None:
+            self.mesh_axes = tuple(self.mesh_axes)
+        self.block = tuple(self.block)
+
+    def mesh_axes_for(self, ndim: int) -> tuple:
+        """Mesh axis names normalised to ``ndim`` entries (None = unsharded)."""
+        ma = tuple(self.mesh_axes or ())
+        return ma[:ndim] + (None,) * (ndim - len(ma))
+
     def describe(self) -> str:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
+        ma = self.mesh_axes_for(len(self.block))
         return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
-                f"mesh_axes={self.mesh_axes})")
+                f"mesh_axes={ma})")
+
+
+# --------------------------------------------------------------------------
+# Plan serialisation + program fingerprinting (the tuner's cache layer)
+# --------------------------------------------------------------------------
+
+def plan_to_dict(plan: DataflowPlan) -> dict:
+    """JSON-safe encoding of a plan (round-trips via :func:`plan_from_dict`)."""
+    return {
+        "groups": [[int(i) for i in grp] for grp in plan.groups],
+        "block": [int(b) for b in plan.block],
+        "dtype": plan.dtype,
+        "backend": plan.backend,
+        "interpret": bool(plan.interpret),
+        "mesh_axes": (None if plan.mesh_axes is None
+                      else list(plan.mesh_axes)),
+        "halo_every": int(plan.halo_every),
+    }
+
+
+def plan_from_dict(d: dict) -> DataflowPlan:
+    ma = d.get("mesh_axes")
+    return DataflowPlan(
+        groups=[list(grp) for grp in d["groups"]],
+        block=tuple(d["block"]),
+        dtype=d.get("dtype", "float32"),
+        backend=d.get("backend", "pallas"),
+        interpret=bool(d.get("interpret", True)),
+        mesh_axes=None if ma is None else tuple(ma),
+        halo_every=int(d.get("halo_every", 1)),
+    )
+
+
+def program_fingerprint(p: Program) -> str:
+    """Stable content hash of a program's *semantics* (ops, fields, scalars,
+    coefficient axes, field dtypes) — the tuner's cache key component.  Two
+    programs with the same fingerprint lower identically, so a tuned plan is
+    transferable between them."""
+    parts = [p.to_text()]
+    parts += [f"field:{n}:{f.role.value}:{f.dtype}"
+              for n, f in sorted(p.fields.items())]
+    parts += [f"coeff:{c}:{ax}" for c, ax in sorted(p.coeffs.items())]
+    parts.append(f"scalars:{','.join(p.scalars)}")
+    return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
 
 
 @dataclasses.dataclass
@@ -91,7 +152,8 @@ class TimeLoopSpec:
 
 
 def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
-                   steps: int, carry_write: str = "repad") -> TimeLoopSpec:
+                   steps: int, carry_write: str = "repad",
+                   group_halos: list | None = None) -> TimeLoopSpec:
     """Size the carry buffers for a fused time loop.
 
     For the Pallas backend a field's carry padding is the elementwise max of
@@ -116,22 +178,26 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
                                for a in range(ndim)], dtype=np.int64)
 
     field_pad = {f: _zeros(ndim) for f in persistent}
-    group_halos = [infer_halo(p, grp) for grp in plan.groups]
+    if group_halos is None:
+        group_halos = [infer_halo(p, grp) for grp in plan.groups]
     for gh in group_halos:
         for f in gh.group_inputs:
             if f in field_pad:
                 field_pad[f] = np.maximum(field_pad[f], gh.input_halo)
-    # the jnp lowerings evaluate every op (no DCE), so the carry must also
-    # cover raw access offsets from ops outside the live fuse groups
-    for op in p.ops:
-        for a in op.accesses():
-            m = field_pad.get(a.field)
-            if m is None:
-                continue
-            for ax in range(ndim):
-                o = int(a.offset[ax])
-                m[ax, 0] = max(m[ax, 0], -o)
-                m[ax, 1] = max(m[ax, 1], o)
+    # the jnp lowerings evaluate every op (no DCE), so their carry must also
+    # cover raw access offsets from ops outside the live fuse groups; the
+    # pallas backend only runs the planned (live) groups, so widening its
+    # carry for dead ops would over-allocate every persistent buffer
+    if plan.backend != "pallas":
+        for op in p.ops:
+            for a in op.accesses():
+                m = field_pad.get(a.field)
+                if m is None:
+                    continue
+                for ax in range(ndim):
+                    o = int(a.offset[ax])
+                    m[ax, 0] = max(m[ax, 0], -o)
+                    m[ax, 1] = max(m[ax, 1], o)
     for f in persistent:
         field_pad[f][:, 1] += align_hi
 
@@ -154,22 +220,40 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
 
 
 def _dtype_bytes(dtype: str) -> int:
-    return {"float32": 4, "bfloat16": 2, "float64": 8}[dtype]
+    return hw.DTYPE_BYTES[dtype]
 
 
-def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int]) -> int:
+def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int],
+              steps: int | None = None) -> int:
     """Bytes of VMEM one kernel instance of the *largest* group claims.
 
     window bytes x live inputs + margin-extended temps + output tiles,
     times 2 for the Pallas double-buffered pipeline.
+
+    With ``steps`` (fused time loop), persistent inputs are windows sliced
+    out of the loop *carry*, whose padding — the max halo over every
+    consuming group plus the lane-tile ``align_hi`` slab sized by
+    :func:`plan_time_loop` — can exceed this group's own halo, enlarging the
+    window the ``input_pad`` path claims.  A plan that fits the budget
+    single-step can therefore exceed it under ``steps=N``; the tuner prunes
+    with this corrected cost.
     """
     bs = _dtype_bytes(plan.dtype)
+    grid = tuple(int(g) for g in grid)
+    group_halos = [infer_halo(p, grp) for grp in plan.groups]
+    carry_pad = (plan_time_loop(p, plan, grid, steps,
+                                group_halos=group_halos).field_pad
+                 if steps is not None else {})
     worst = 0
-    for grp in plan.groups:
-        gh = infer_halo(p, grp)
+    for grp, gh in zip(plan.groups, group_halos):
         blk = np.minimum(np.asarray(plan.block[:p.ndim]), np.asarray(grid))
-        win = blk + gh.input_halo[:, 0] + gh.input_halo[:, 1]
-        total = int(np.prod(win)) * len(gh.group_inputs) * bs
+        total = 0
+        for f in gh.group_inputs:
+            pad = gh.input_halo
+            if f in carry_pad:
+                pad = np.maximum(pad, carry_pad[f])
+            win = blk + pad[:, 0] + pad[:, 1]
+            total += int(np.prod(win)) * bs
         for i in grp:
             m = gh.margins[i]
             ext = blk + m[:, 0] + m[:, 1]
@@ -181,12 +265,18 @@ def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int]) -> int:
 def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
               interpret: bool = True, strategy: str = "auto",
               dtype: str = "float32",
-              vmem_budget: int = hw.VMEM_PLAN_BUDGET) -> DataflowPlan:
+              vmem_budget: int = hw.VMEM_PLAN_BUDGET,
+              steps: int | None = None) -> DataflowPlan:
     """Pick fuse groups and a lane-aligned block shape that fits VMEM.
 
     Mirrors the paper's auto-optimisation: the planner, not the programmer,
     chooses the dataflow structure.  Last axis is lane-aligned to 128
     (the 512-bit-burst analogue); the remaining axes shrink first.
+
+    With ``steps`` (the plan will drive a fused time loop) the budget check
+    uses the carry-aware :func:`vmem_cost`, so blocks whose loop-carry
+    padding enlarges the kernel windows past the budget are shrunk here
+    rather than discovered over budget at run time.
     """
     grid = tuple(int(g) for g in grid)
     ndim = p.ndim
@@ -203,8 +293,9 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
 
     def fits(b):
         plan = DataflowPlan(groups=groups, block=tuple(b), dtype=dtype,
-                            backend=backend, interpret=interpret)
-        return vmem_cost(p, plan, grid) <= vmem_budget
+                            backend=backend, interpret=interpret,
+                            mesh_axes=(None,) * ndim)
+        return vmem_cost(p, plan, grid, steps=steps) <= vmem_budget
 
     # shrink non-lane axes first, then the lane axis (keep 128 quanta)
     guard = 0
@@ -225,4 +316,5 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
             else:
                 break
     return DataflowPlan(groups=groups, block=tuple(blk), dtype=dtype,
-                        backend=backend, interpret=interpret)
+                        backend=backend, interpret=interpret,
+                        mesh_axes=(None,) * ndim)

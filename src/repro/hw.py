@@ -48,6 +48,9 @@ VMEM_PLAN_BUDGET = TPU_V5E.vmem_bytes // 4
 LANE = TPU_V5E.lanes
 SUBLANE = TPU_V5E.sublanes
 
+# field storage dtypes the planner/cost models understand
+DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float64": 8}
+
 
 def align_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m

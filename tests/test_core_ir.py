@@ -124,3 +124,43 @@ def test_auto_plan_small_grid_clamps():
     p = pw_advection()
     plan = auto_plan(p, (8, 8, 32))
     assert all(b >= 1 for b in plan.block)
+
+
+def test_stage_split_bad_strategy_names_valid_ones():
+    with pytest.raises(ValueError) as exc:
+        stage_split(pw_advection(), "wat")
+    msg = str(exc.value)
+    assert "'fused'" in msg and "'per_field'" in msg and "'auto'" in msg
+
+
+def test_mesh_axes_normalised_to_program_ndim():
+    """Regression: the default was a hard-coded 3-tuple, wrong for 2-D."""
+    b = ProgramBuilder("p2", ndim=2)
+    x, = b.inputs("x")
+    o = b.output("o")
+    b.define(o, x[-1, 0] + x[0, 1])
+    p2 = b.build()
+    assert auto_plan(p2, (32, 128)).mesh_axes == (None, None)
+    assert auto_plan(pw_advection(), (8, 8, 32)).mesh_axes == (None,) * 3
+    from repro.core.schedule import DataflowPlan
+    plan = DataflowPlan(groups=[[0]], block=(32, 128))
+    assert plan.mesh_axes is None
+    assert plan.mesh_axes_for(2) == (None, None)
+    assert DataflowPlan(groups=[[0]], block=(32, 128),
+                        mesh_axes=("x",)).mesh_axes_for(2) == ("x", None)
+
+
+def test_vmem_cost_accounts_for_fused_loop_carry():
+    """Regression: a plan can fit the budget single-step yet claim more
+    VMEM under steps=N, where windows are sliced from the align_hi-padded
+    carry; the steps-aware cost must be >= the single-step cost."""
+    p = pw_advection()
+    grid = (8, 8, 130)      # 130 -> 2x128 lane tiles: align_hi = 126
+    plan = auto_plan(p, grid, backend="pallas")
+    single = vmem_cost(p, plan, grid)
+    looped = vmem_cost(p, plan, grid, steps=3)
+    assert looped > single
+    # and on an exactly-aligned grid the two geometries coincide
+    grid2 = (8, 8, 128)
+    plan2 = auto_plan(p, grid2, backend="pallas")
+    assert vmem_cost(p, plan2, grid2, steps=3) == vmem_cost(p, plan2, grid2)

@@ -180,6 +180,46 @@ def test_time_loop_spec_geometry():
             assert all(v >= 0 for v in o)
 
 
+def dead_op_program():
+    """A live 1-wide stencil plus a DCE'd op reaching 4 cells up-axis-0."""
+    from repro.core.frontend import ProgramBuilder
+    b = ProgramBuilder("deadop", ndim=3)
+    u, = b.inputs("u")
+    dead = b.temp("dead")                     # produced, never consumed
+    su = b.output("su")
+    b.define(dead, u[4, 0, 0] * 2.0)
+    b.define(su, u[-1, 0, 0] + u[1, 0, 0] - 2.0 * u[0, 0, 0])
+    return b.build()
+
+
+def test_dead_op_carry_padding_gated_on_backend():
+    """Regression: the raw-access widening workaround is for the jnp
+    lowerings (which evaluate every op, no DCE); the pallas backend only
+    runs live fuse groups, so its carry must not be over-allocated for a
+    dead op's reach."""
+    p = dead_op_program()
+    grid = (8, 8, 128)
+    pallas_spec = plan_time_loop(p, auto_plan(p, grid, backend="pallas"),
+                                 grid, 2)
+    jnp_spec = plan_time_loop(p, auto_plan(p, grid, backend="jnp_fused"),
+                              grid, 2)
+    # live halo on axis 0 is 1; the dead op reads at +4
+    assert pallas_spec.field_pad["u"][0, 1] == 1
+    assert jnp_spec.field_pad["u"][0, 1] == 4
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dead_op_fused_loop_parity(backend):
+    """Both carry geometries stay numerically correct with a dead op."""
+    grid = (8, 8, 64)
+    p = dead_op_program()
+    rng = np.random.default_rng(3)
+    fields = {"u": jnp.asarray(rng.normal(size=grid).astype(np.float32))}
+    check_fused(p, grid, (fields, {}, {}),
+                lambda fl, out: {"u": fl["u"] + 0.1 * out["su"]},
+                steps=3, backend=backend)
+
+
 def test_steps_requires_update():
     p = pw_advection()
     with pytest.raises(ValueError, match="update"):

@@ -1,0 +1,260 @@
+"""Auto-tuner (repro.core.tune): measured plan search + persistent cache.
+
+Invariants:
+* The search is deterministic in its measurements: an injected fake timer
+  returning the same times yields the same winning plan.
+* ``compile_program(..., strategy="tuned")`` is a pure cache hit after the
+  first tune — zero timed runs, same plan.
+* The cache is invalidated by program fingerprint and grid changes.
+* The tuned plan is never slower than the ``auto_plan`` baseline on the
+  tuner's own measurements (the baseline is always a candidate).
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.apps import pw_advection, pw_advection_update
+from repro.core import (PlanCache, TuneConfig, compile_program,
+                        get_tuned_plan, plan_from_dict, plan_to_dict,
+                        program_fingerprint, tune_plan)
+from repro.core.frontend import ProgramBuilder
+from repro.core.schedule import auto_plan
+from repro.core.tune import cache_key
+
+GRID = (8, 8, 16)
+
+
+def make_fake_timer():
+    """Deterministic fake: time depends only on the call index, and the
+    candidate order is deterministic, so measurements are reproducible.
+    Never calls ``fn`` — a counted call *is* a timed run."""
+    calls = {"n": 0}
+
+    def timer(fn):
+        i = calls["n"]
+        calls["n"] += 1
+        return 0.001 * ((i * 7) % 13 + 1)
+
+    return timer, calls
+
+
+def small_program():
+    b = ProgramBuilder("tune_small", ndim=3)
+    u, = b.inputs("u")
+    su = b.output("su")
+    b.define(su, u[-1, 0, 0] + u[1, 0, 0] - 2.0 * u[0, 0, 0])
+    return b.build()
+
+
+def small_update(fields, out):
+    return {"u": fields["u"] + 0.1 * out["su"]}
+
+
+# ----------------------------------------------------------- determinism
+
+@pytest.mark.parametrize("backend", ["jnp_fused", "pallas"])
+def test_tuner_determinism_with_fake_timer(backend):
+    """Same measurements => same winning plan (and same carry_write)."""
+    results = []
+    for _ in range(2):
+        timer, _calls = make_fake_timer()
+        cfg = TuneConfig(steps=2, max_measured=4, timer=timer)
+        res = tune_plan(pw_advection(), GRID, backend=backend,
+                        update=pw_advection_update(0.1), config=cfg,
+                        cache=PlanCache(path=None))
+        results.append(res)
+    a, b = results
+    assert plan_to_dict(a.plan) == plan_to_dict(b.plan)
+    assert a.carry_write == b.carry_write
+    assert a.record["label"] == b.record["label"]
+
+
+# ------------------------------------------------------------ cache hits
+
+def test_second_tuned_compile_is_pure_cache_hit(tmp_path):
+    """Acceptance: the second ``strategy="tuned"`` compile performs zero
+    timed runs and reuses the stored plan — across PlanCache instances
+    (i.e. through the JSON file, not just process memory)."""
+    p = pw_advection()
+    path = str(tmp_path / "plans.json")
+    update = pw_advection_update(0.1)
+
+    timer1, calls1 = make_fake_timer()
+    ex1 = compile_program(p, GRID, backend="jnp_fused", strategy="tuned",
+                          steps=2, update=update,
+                          tune_config=TuneConfig(steps=2, max_measured=3,
+                                                 timer=timer1),
+                          plan_cache=PlanCache(path=path))
+    assert calls1["n"] > 0          # the first compile really tuned
+
+    timer2, calls2 = make_fake_timer()
+    ex2 = compile_program(p, GRID, backend="jnp_fused", strategy="tuned",
+                          steps=2, update=update,
+                          tune_config=TuneConfig(steps=2, max_measured=3,
+                                                 timer=timer2),
+                          plan_cache=PlanCache(path=path))
+    assert calls2["n"] == 0         # pure cache hit: zero timed runs
+    assert plan_to_dict(ex1.plan) == plan_to_dict(ex2.plan)
+    assert ex1.time_spec.carry_write == ex2.time_spec.carry_write
+
+
+def test_cache_file_format_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    timer, _ = make_fake_timer()
+    res = tune_plan(small_program(), GRID, backend="jnp_fused",
+                    update=small_update,
+                    config=TuneConfig(steps=2, timer=timer),
+                    cache=PlanCache(path=path))
+    doc = json.load(open(path))
+    assert doc["version"] == 1
+    rec = doc["entries"][res.key]
+    assert plan_to_dict(plan_from_dict(rec["plan"])) == rec["plan"]
+    assert rec["fingerprint"] == program_fingerprint(small_program())
+    assert rec["measured"] >= 1 and rec["candidates"] >= rec["measured"]
+
+
+# ------------------------------------------------------ cache invalidation
+
+def test_cache_invalidated_by_program_fingerprint(tmp_path):
+    """A semantically different program misses the cache and re-tunes."""
+    path = str(tmp_path / "plans.json")
+    timer, calls = make_fake_timer()
+    cfg = TuneConfig(steps=2, timer=timer)
+    get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                   update=small_update, config=cfg, cache=PlanCache(path=path))
+    n_first = calls["n"]
+    assert n_first > 0
+
+    b = ProgramBuilder("tune_small", ndim=3)   # same name, different stencil
+    u, = b.inputs("u")
+    su = b.output("su")
+    b.define(su, u[0, -1, 0] + u[0, 1, 0] - 2.0 * u[0, 0, 0])
+    other = b.build()
+    assert program_fingerprint(other) != program_fingerprint(small_program())
+
+    res = get_tuned_plan(other, GRID, backend="jnp_fused",
+                         update=small_update, config=cfg,
+                         cache=PlanCache(path=path))
+    assert not res.cache_hit
+    assert calls["n"] > n_first     # it measured again
+
+    # while the original program still hits
+    res2 = get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                          update=small_update, config=cfg,
+                          cache=PlanCache(path=path))
+    assert res2.cache_hit
+
+
+def test_cache_invalidated_by_grid_change(tmp_path):
+    path = str(tmp_path / "plans.json")
+    timer, calls = make_fake_timer()
+    cfg = TuneConfig(steps=2, timer=timer)
+    cache = PlanCache(path=path)
+    p = small_program()
+    get_tuned_plan(p, GRID, backend="jnp_fused", update=small_update,
+                   config=cfg, cache=cache)
+    n_first = calls["n"]
+    res = get_tuned_plan(p, (16, 8, 16), backend="jnp_fused",
+                         update=small_update, config=cfg, cache=cache)
+    assert not res.cache_hit and calls["n"] > n_first
+    assert cache_key(p, GRID, "jnp_fused", True) != \
+        cache_key(p, (16, 8, 16), "jnp_fused", True)
+
+
+def test_cache_keyed_by_backend_dtype_and_mode():
+    p = small_program()
+    assert cache_key(p, GRID, "pallas", True) != \
+        cache_key(p, GRID, "jnp_fused", True)
+    assert cache_key(p, GRID, "pallas", True) != \
+        cache_key(p, GRID, "pallas", False)
+    # a float32 winner must not serve a bfloat16 compile, nor a single-step
+    # winner a fused steps=N compile (different pruning + ranking)
+    assert cache_key(p, GRID, "pallas", True, "float32") != \
+        cache_key(p, GRID, "pallas", True, "bfloat16")
+    assert cache_key(p, GRID, "pallas", True, mode="loop") != \
+        cache_key(p, GRID, "pallas", True, mode="single")
+
+
+# ------------------------------------------- measured quality guarantee
+
+@pytest.mark.parametrize("backend", ["jnp_fused", "pallas"])
+def test_tuned_never_slower_than_auto_plan_on_measurements(backend):
+    """The auto_plan seed is always measured, so argmin <= baseline."""
+    cfg = TuneConfig(steps=2, repeats=1, max_measured=3)
+    res = tune_plan(pw_advection(), GRID, backend=backend,
+                    update=pw_advection_update(0.1), config=cfg,
+                    cache=PlanCache(path=None))
+    base = res.baseline
+    assert base is not None and base.us_fused is not None
+    assert res.record["us_fused"] <= base.us_fused
+
+
+def test_tuned_plan_compiles_and_matches_auto_plan_results():
+    """The tuned executable computes the same answer as the heuristic one."""
+    import numpy as np
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    p = small_program()
+    fields = {"u": jnp.asarray(rng.normal(size=GRID).astype(np.float32))}
+    timer, _ = make_fake_timer()
+    ex_t = compile_program(p, GRID, backend="pallas", strategy="tuned",
+                           tune_config=TuneConfig(steps=2, timer=timer),
+                           plan_cache=PlanCache(path=None))
+    ex_a = compile_program(p, GRID, backend="pallas")
+    got = ex_t(fields, {}, {})
+    want = ex_a(fields, {}, {})
+    np.testing.assert_allclose(np.asarray(got["su"]),
+                               np.asarray(want["su"]), atol=1e-6)
+
+
+def test_tune_without_update_measures_single_step_only():
+    timer, calls = make_fake_timer()
+    res = tune_plan(small_program(), GRID, backend="jnp_fused",
+                    config=TuneConfig(steps=2, timer=timer),
+                    cache=PlanCache(path=None))
+    assert res.record["us_fused"] is None
+    assert res.record["us_single"] is not None
+    assert calls["n"] == res.record["measured"]  # one timing per candidate
+
+
+def test_candidate_blocks_lane_quantised():
+    """Every measured pallas candidate keeps a lane-quantised last axis."""
+    timer, _ = make_fake_timer()
+    grid = (8, 8, 256)
+    res = tune_plan(pw_advection(), grid, backend="pallas",
+                    update=pw_advection_update(0.1),
+                    config=TuneConfig(steps=2, max_measured=6, timer=timer),
+                    cache=PlanCache(path=None))
+    for c in res.measured:
+        last = c.plan.block[-1]
+        assert last == grid[-1] or last % 128 == 0
+
+
+def test_force_retune_bypasses_cache(tmp_path):
+    """The key encodes the problem, not the search effort; force_retune is
+    the escape hatch for re-searching with different knobs."""
+    path = str(tmp_path / "plans.json")
+    timer, calls = make_fake_timer()
+    cfg = TuneConfig(steps=2, timer=timer)
+    get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                   update=small_update, config=cfg, cache=PlanCache(path=path))
+    n_first = calls["n"]
+    res = get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                         update=small_update,
+                         config=dataclasses.replace(cfg, force_retune=True),
+                         cache=PlanCache(path=path))
+    assert not res.cache_hit and calls["n"] > n_first
+
+
+def test_corrupt_cache_file_is_ignored(tmp_path):
+    path = tmp_path / "plans.json"
+    path.write_text("{not json")
+    timer, calls = make_fake_timer()
+    res = get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                         update=small_update,
+                         config=TuneConfig(steps=2, timer=timer),
+                         cache=PlanCache(path=str(path)))
+    assert not res.cache_hit and calls["n"] > 0
+    assert json.load(open(path))["entries"]    # rewritten with the record
