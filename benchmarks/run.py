@@ -14,6 +14,12 @@ three backends incl. pallas interpret) and writes the rows to a
 CI-sized problem and emits tuned-vs-``auto_plan`` rows per backend, so the
 artifact trail records the tuner's wins per commit; the winning plans are
 persisted to the JSON plan cache at ``--plan-cache``.
+
+``--mesh AxB`` (with ``--smoke``) additionally runs the *sharded* fused
+loop — ``compile_program(..., mesh=, steps=N)`` with carry-resident halo
+exchange — over a simulated AxB device mesh and emits sharded steps/sec
+rows into the same artifact.  On CPU hosts the required device count is
+simulated automatically via ``--xla_force_host_platform_device_count``.
 """
 
 from __future__ import annotations
@@ -21,9 +27,44 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import os
 import platform
+import sys
 import time
+
+
+def _parse_mesh(val: str) -> tuple:
+    try:
+        shape = tuple(int(v) for v in val.split("x"))
+    except ValueError:
+        raise SystemExit(f"run.py: error: --mesh must be AxB (or AxBxC), "
+                         f"got {val!r}")
+    if not shape or any(s < 1 for s in shape):
+        raise SystemExit(f"run.py: error: --mesh axes must be >= 1, "
+                         f"got {val!r}")
+    return shape
+
+
+def _mesh_arg(argv) -> tuple | None:
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return _parse_mesh(argv[i + 1])
+        if a.startswith("--mesh="):
+            return _parse_mesh(a.split("=", 1)[1])
+    return None
+
+
+# honour --mesh before anything imports jax: simulated CPU devices can only
+# be configured through XLA_FLAGS at process start (append to any existing
+# flags; an explicit device-count override wins)
+_MESH_SHAPE = _mesh_arg(sys.argv)
+if _MESH_SHAPE and ("--xla_force_host_platform_device_count"
+                    not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " "
+        + "--xla_force_host_platform_device_count="
+        + str(math.prod(_MESH_SHAPE))).strip()
 
 try:
     from benchmarks import fig4_throughput, fig5_6_energy, tab1_2_resources
@@ -37,21 +78,30 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
-def run_smoke(out_path: str) -> None:
-    """Tiny fused-loop benchmark (16^3, 3 steps, interpret mode) -> JSON."""
+def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
+    """Tiny fused-loop benchmark (16^3, 3 steps, interpret mode) -> JSON.
+
+    With ``mesh_shape`` the sharded fused loop (one dispatch, ppermute
+    halo exchange inside the carry) runs over a simulated device mesh and
+    contributes ``dist/...`` steps/sec rows to the artifact."""
     rows = []
 
     def emit_row(name: str, us: float, derived: str = ""):
         emit(name, us, derived)
         rows.append({"name": name, "us": round(us, 2), "derived": derived})
 
+    grid, steps = (16, 16, 16), 3
     fig4_throughput.run_fused_loop(
-        emit_row, grid=(16, 16, 16), steps=3,
+        emit_row, grid=grid, steps=steps,
         backends=("jnp_naive", "jnp_fused", "pallas"))
+    if mesh_shape:
+        run_sharded_loop(emit_row, grid=grid, steps=steps,
+                         mesh_shape=mesh_shape)
     doc = {
         "kind": "bench_smoke",
-        "grid": [16, 16, 16],
-        "steps": 3,
+        "grid": list(grid),
+        "steps": steps,
+        "mesh": list(mesh_shape) if mesh_shape else None,
         "time": time.time(),
         "platform": platform.platform(),
         "commit": os.environ.get("GITHUB_SHA", ""),
@@ -60,6 +110,47 @@ def run_smoke(out_path: str) -> None:
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
+
+
+def run_sharded_loop(emit_row, grid: tuple, steps: int,
+                     mesh_shape: tuple) -> None:
+    """Sharded fused-loop rows: steps/sec of N distributed steps in one
+    jitted dispatch, zero and periodic boundaries."""
+    import jax
+    import numpy as np
+    from repro.apps import pw_advection, pw_advection_update
+    from repro.core import compile_program
+    from repro.dist.sharding import make_auto_mesh
+
+    names = ("X", "Y", "Z")[:len(mesh_shape)]
+    mesh = make_auto_mesh(mesh_shape, names)
+    update = pw_advection_update(0.1)
+    tag = "x".join(str(g) for g in grid)
+    mtag = "x".join(str(m) for m in mesh_shape)
+    rng = np.random.default_rng(0)
+    fields = {f: rng.normal(size=grid).astype(np.float32)
+              for f in ("u", "v", "w")}
+    scalars = {"tcx": np.float32(0.05), "tcy": np.float32(0.05)}
+    coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+              for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+    for boundary in ("zero", "periodic"):
+        p = pw_advection(boundary=boundary)
+        for backend in ("jnp_fused", "pallas"):
+            exN = compile_program(p, grid, backend=backend, mesh=mesh,
+                                  mesh_axes=names, steps=steps,
+                                  update=update)
+            jax.block_until_ready(exN(fields, scalars, coeffs)["u"])
+            dt = float("inf")
+            for _ in range(3):                  # best-of-3 (CPU noise)
+                t0 = time.perf_counter()
+                out = exN(fields, scalars, coeffs)
+                jax.block_until_ready(out["u"])
+                dt = min(dt, time.perf_counter() - t0)
+            emit_row(
+                f"dist/pw_advection/{tag}/mesh{mtag}/{boundary}/{backend}"
+                "/fused_loop",
+                dt * 1e6, f"{steps / dt:.2f} steps/s "
+                          f"local={exN.shard.local_grid}")
 
 
 def run_tune(out_path: str, cache_path: str) -> None:
@@ -127,7 +218,10 @@ def lm_roofline_summary(emit):
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
+    # no prefix abbreviation: the import-time _mesh_arg scanner (which sized
+    # the simulated device count before jax loaded) only matches the full
+    # --mesh spelling, and the two must never diverge
+    ap = argparse.ArgumentParser(description=__doc__, allow_abbrev=False)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized fused-loop benchmark, writes a JSON "
                          "artifact instead of the full paper sweep")
@@ -139,14 +233,29 @@ def main() -> None:
                          "(default BENCH_smoke.json / BENCH_tune_smoke.json)")
     ap.add_argument("--plan-cache", default="PLAN_CACHE_smoke.json",
                     help="plan-cache path for --tune")
+    ap.add_argument("--mesh", default=None,
+                    help="AxB (or AxBxC) device mesh: adds sharded "
+                         "fused-loop steps/sec rows to the --smoke "
+                         "artifact (CPU devices simulated automatically)")
     args = ap.parse_args()
+    # reuse the shape parsed at import time (it sized the simulated device
+    # count) rather than re-parsing args.mesh — one parser, no drift
+    mesh_shape = _MESH_SHAPE
+    want = (tuple(int(v) for v in args.mesh.split("x"))
+            if args.mesh else None)
+    if want != mesh_shape:
+        ap.error(f"--mesh mismatch: argparse saw {want}, the import-time "
+                 f"scanner saw {mesh_shape}")
+    if mesh_shape and (args.tune or not args.smoke):
+        ap.error("--mesh only applies to --smoke (the XLA device-count "
+                 "override would silently skew --tune / full-sweep timings)")
 
     emit("bench/header", 0.0, "name,us_per_call,derived")
     if args.tune:
         run_tune(args.out or "BENCH_tune_smoke.json", args.plan_cache)
         return
     if args.smoke:
-        run_smoke(args.out or "BENCH_smoke.json")
+        run_smoke(args.out or "BENCH_smoke.json", mesh_shape=mesh_shape)
         return
     fig4_throughput.run(emit)
     fig5_6_energy.run(emit)

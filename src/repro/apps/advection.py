@@ -24,8 +24,10 @@ from ..core.frontend import ProgramBuilder, absolute, maximum, minimum, sign, wh
 from ..core.ir import Program
 
 
-def pw_advection() -> Program:
-    b = ProgramBuilder("pw_advection", ndim=3)
+def pw_advection(boundary: str = "zero") -> Program:
+    """``boundary="periodic"`` builds the torus-domain variant (every field
+    wraps; same IR, same plans, different halo fill on every backend)."""
+    b = ProgramBuilder("pw_advection", ndim=3, boundary=boundary)
     u, v, w = b.inputs("u", "v", "w")
     tcx, tcy = b.scalars("tcx", "tcy")
     tzc1, tzc2 = b.coeff("tzc1", axis=2), b.coeff("tzc2", axis=2)
@@ -80,9 +82,11 @@ def tracer_advection_update():
     return update
 
 
-def tracer_advection() -> Program:
-    """24 stencil ops / 6 input fields, MUSCL-style, with dependency chains."""
-    b = ProgramBuilder("tracer_advection", ndim=3)
+def tracer_advection(boundary: str = "zero") -> Program:
+    """24 stencil ops / 6 input fields, MUSCL-style, with dependency chains.
+
+    ``boundary="periodic"`` builds the torus-domain variant."""
+    b = ProgramBuilder("tracer_advection", ndim=3, boundary=boundary)
     # 6 fields: tracer, 3 velocity components, 2 metric/mask fields
     t, un, vn, wn, e3t, msk = b.inputs("t", "un", "vn", "wn", "e3t", "msk")
     rdt, zeps = b.scalars("rdt", "zeps")

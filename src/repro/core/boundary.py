@@ -1,0 +1,161 @@
+"""Boundary-condition subsystem: one place that knows how halos are filled.
+
+Every layer of the pipeline needs the same decision — what does an access
+outside the domain read? — and before this module each backend hard-coded
+the zero-halo convention.  Boundaries are declared per field on the IR
+(:class:`~repro.core.ir.FieldDecl.boundary`) and the helpers here realise
+them uniformly:
+
+* ``"zero"``      out-of-domain reads return 0 (the IR's historical
+                  convention; ``jnp.pad`` zero slabs, partial ``ppermute``
+                  rings that leave edge shards zero-filled).
+* ``"periodic"``  the domain is a torus: out-of-domain reads wrap around
+                  (``jnp.roll`` / wrap-slices on a single device, full-ring
+                  ``ppermute`` permutations across a mesh).
+
+The same helpers serve the jnp lowerings (:func:`shift_field`), the Pallas
+orchestrators (:func:`pad_field` builds carry/window buffers), the
+distributed executor (:func:`ring_perms` builds the exchange permutation),
+and the coefficient path (:func:`pad_coeff`), so a program declared
+periodic runs a torus identically on all backends and any mesh.
+
+Mixing boundaries inside one program is allowed with one validated rule
+(:func:`validate_boundaries`): an op producing a *periodic* field may only
+read periodic fields (and may only use per-level coefficients on a full
+torus).  Without the rule, overlapped-tiling recompute in fused Pallas
+groups could not reproduce the wraparound value of a periodic temp built
+from zero-extended inputs, and backends would disagree at the edges.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+BOUNDARIES = ("zero", "periodic")
+
+
+def validate_boundaries(p) -> None:
+    """IR-level boundary checks (called from ``Program.validate``)."""
+    for n, f in p.fields.items():
+        if f.boundary not in BOUNDARIES:
+            raise ValueError(
+                f"field {n!r} has unknown boundary {f.boundary!r}; valid: "
+                + ", ".join(repr(b) for b in BOUNDARIES))
+    torus = all(f.boundary == "periodic" for f in p.fields.values())
+    for op in p.ops:
+        if p.fields[op.out].boundary != "periodic":
+            continue
+        for a in op.accesses():
+            if p.fields[a.field].boundary != "periodic":
+                raise ValueError(
+                    f"op {op.name or op.out!r} produces periodic field "
+                    f"{op.out!r} but reads zero-boundary field {a.field!r}; "
+                    "a periodic field's wraparound values cannot be "
+                    "recomputed from zero-extended inputs")
+        if op.coeff_refs() and not torus:
+            raise ValueError(
+                f"op {op.name or op.out!r} produces periodic field "
+                f"{op.out!r} and reads per-level coefficients, but the "
+                "program is not a full torus (coefficient wraparound is "
+                "axis-global)")
+
+
+def coeff_mode(p) -> str:
+    """How 1-D coefficient arrays extend beyond the domain: they wrap only
+    on a full torus (every field periodic), zero-extend otherwise."""
+    return "periodic" if p.is_torus() else "zero"
+
+
+def pad_field(x: jnp.ndarray, lo: Sequence[int], hi: Sequence[int],
+              boundary: str, align_hi: Sequence[int] | None = None
+              ) -> jnp.ndarray:
+    """Pad ``x`` with halo slabs per ``boundary`` plus a zero alignment slab.
+
+    ``lo``/``hi`` are the per-axis halo widths; ``align_hi`` (optional) is
+    extra hi-side tile-alignment padding, always zero-filled — alignment
+    positions are never read by in-domain consumers, only cropped or
+    masked, so they need no wraparound values.
+    """
+    ndim = x.ndim
+    align_hi = tuple(align_hi) if align_hi is not None else (0,) * ndim
+    if boundary == "zero":
+        pads = [(int(lo[a]), int(hi[a]) + int(align_hi[a]))
+                for a in range(ndim)]
+        return jnp.pad(x, pads)
+    if boundary != "periodic":
+        raise ValueError(f"unknown boundary {boundary!r}")
+    for ax in range(ndim):
+        l, h, al = int(lo[ax]), int(hi[ax]), int(align_hi[ax])
+        if l == 0 and h == 0 and al == 0:
+            continue
+        n = x.shape[ax]
+        if l > n or h > n:
+            raise ValueError(
+                f"periodic halo ({l},{h}) exceeds extent {n} on axis {ax}")
+        pieces = []
+        if l:
+            pieces.append(jax.lax.slice_in_dim(x, n - l, n, axis=ax))
+        pieces.append(x)
+        if h:
+            pieces.append(jax.lax.slice_in_dim(x, 0, h, axis=ax))
+        if al:
+            shp = list(x.shape)
+            shp[ax] = al
+            pieces.append(jnp.zeros(shp, x.dtype))
+        x = jnp.concatenate(pieces, axis=ax)
+    return x
+
+
+def shift_field(x: jnp.ndarray, offset: Sequence[int], boundary: str
+                ) -> jnp.ndarray:
+    """``out[i] = x[i + offset]`` with out-of-domain reads per ``boundary``."""
+    offset = tuple(int(o) for o in offset)
+    if all(o == 0 for o in offset):
+        return x
+    if boundary == "periodic":
+        axes = tuple(ax for ax, o in enumerate(offset) if o != 0)
+        return jnp.roll(x, shift=tuple(-offset[ax] for ax in axes), axis=axes)
+    if boundary != "zero":
+        raise ValueError(f"unknown boundary {boundary!r}")
+    h = max(abs(o) for o in offset)
+    xp = jnp.pad(x, h)
+    idx = tuple(slice(h + offset[ax], h + offset[ax] + x.shape[ax])
+                for ax in range(x.ndim))
+    return xp[idx]
+
+
+def pad_coeff(c: jnp.ndarray, lo: int, hi: int, mode: str) -> jnp.ndarray:
+    """Extend a replicated 1-D coefficient array by (lo, hi) per ``mode``.
+
+    The wrap path gathers modular indices, so it stays correct even when
+    the tile-alignment slab makes ``hi`` comparable to the array length.
+    """
+    lo, hi = int(lo), int(hi)
+    if lo == 0 and hi == 0:
+        return c
+    if mode == "zero":
+        return jnp.pad(c, (lo, hi))
+    if mode != "periodic":
+        raise ValueError(f"unknown boundary {mode!r}")
+    n = c.shape[0]
+    return c[jnp.arange(-lo, n + hi) % n]
+
+
+def ring_perms(n: int, direction: int, periodic: bool) -> list:
+    """``ppermute`` permutation shifting data by one shard.
+
+    ``direction=+1`` sends each shard's slab to its right neighbour (fills
+    *lo* halos), ``-1`` to its left (fills *hi* halos).  Periodic closes
+    the ring; zero leaves the edge shard unreceiving, which ``ppermute``
+    zero-fills — exactly the zero-halo convention at the global edge.
+    """
+    if direction not in (1, -1):
+        raise ValueError(f"direction must be +1/-1, got {direction}")
+    if periodic:
+        return [(i, (i + direction) % n) for i in range(n)]
+    if direction == 1:
+        return [(i, i + 1) for i in range(n - 1)]
+    return [(i + 1, i) for i in range(n - 1)]

@@ -4,26 +4,48 @@ The TPU-cluster analogue of the paper's step 9 ("one AXI bundle / HBM bank
 per field"): every chip owns a contiguous sub-domain in its own HBM, and the
 inter-bank traffic becomes ``lax.ppermute`` halo exchange over ICI.
 
-Structure inside ``shard_map``:
+This module is the *sharded lowering* consumed by
+:func:`repro.core.pipeline.compile_program` — the same planner output
+(:class:`DataflowPlan` + :class:`ShardSpec` + :class:`TimeLoopSpec`) that
+drives the local backends drives the SPMD ones:
 
-    for each fuse group (dataflow stage):
-        for each stage input:  halo-exchange + pad  (axis-by-axis, so the
-                               slab sent along axis k carries the halos
-                               already attached for axes < k -> corners are
-                               correct for diagonal offsets)
-        run the generated Pallas group kernel on the local padded block,
-        passing the shard origin so the global-domain mask is exact
-        stage outputs feed later stages
+* :func:`lower_sharded` — one program step under ``shard_map``.  Per fuse
+  group, every group input is halo-exchanged axis-by-axis (the slab sent
+  along axis k carries the halos already attached for axes < k, so corners
+  are correct for diagonal offsets), then the group runs on the local
+  padded block with the shard origin so the global-domain mask is exact.
 
-Edges are zero-filled (non-periodic): ``ppermute`` leaves non-receiving
-shards with zeros, which *is* the IR's zero-halo convention — no special
-boundary code.  XLA schedules the per-axis permutes of different fields
-independently, so halo traffic overlaps with the Pallas compute of earlier
-groups (dataflow concurrency at cluster scale).
+* :func:`lower_sharded_time_loop` — the whole time loop in one dispatch:
+  a ``lax.fori_loop`` *inside* ``shard_map`` whose carry holds one
+  pre-padded local buffer per persistent field.  Each step refreshes the
+  halo slabs by ``ppermute`` straight from the carry (no host round trip),
+  runs the fuse groups against the refreshed buffers (the kernels slice
+  their windows via ``input_pad``), and writes the new interiors back.
+  One exchange per field per step serves every consuming group, because
+  the carry is padded to the worst group's halo (``TimeLoopSpec.field_pad``;
+  ``ShardSpec.field_halo`` records the same per-field halos for the
+  plan-time single-hop validation).
+
+Boundaries follow each field's IR declaration (:mod:`repro.core.boundary`):
+``"zero"`` uses partial ``ppermute`` rings whose unreceiving edge shards
+stay zero-filled — the zero-halo convention with no special code — while
+``"periodic"`` closes the ring (and wraps locally on unsharded axes), so
+the same program runs a torus across any mesh.  XLA schedules the per-axis
+permutes of different fields independently, so halo traffic overlaps with
+the compute of earlier groups (dataflow concurrency at cluster scale).
+
+All three backends lower here: ``pallas`` runs the generated group kernels
+on local blocks; the jnp backends route temp accesses through
+:func:`lower_jnp.lower`'s ``shift_fn`` hook (ppermute shifts) and slice
+replicated coefficient arrays at the shard origin via ``coeff_fn``.
+
+:func:`make_sharded_executor` — the original standalone entry point — is
+deprecated; it now simply forwards to ``compile_program(..., mesh=...)``.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Mapping, Sequence
 
 import jax
@@ -37,156 +59,501 @@ except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..kernels.stencil3d import build_group_call
+from . import boundary as bc
 from .ir import FieldRole, Program
-from .schedule import DataflowPlan, auto_plan
+from .lower_jnp import lower as lower_jnp_step
+from .lower_pallas import _pad_coeffs, _run_groups
+from .schedule import DataflowPlan, ShardSpec, TimeLoopSpec
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
 
 
-def _axis_size(mesh: Mesh, name) -> int:
-    return 1 if name is None else int(mesh.shape[name])
+def _exchange_axis(x: jnp.ndarray, ax: int, lo: int, hi: int, align: int,
+                   axis_name, n: int, periodic: bool) -> jnp.ndarray:
+    """Pad ``x`` along one axis with neighbour halos, wrap, or zeros.
+
+    Sharded axes (``axis_name`` with ``n > 1``) fetch the slabs by
+    ``ppermute`` (ring closed iff periodic); unsharded axes wrap locally
+    (periodic) or zero-fill.  ``align`` appends a zero alignment slab.
+    """
+    lo, hi, align = int(lo), int(hi), int(align)
+    if lo == 0 and hi == 0 and align == 0:
+        return x
+    sharded = axis_name is not None and n > 1
+    size = x.shape[ax]
+    pieces = []
+    if lo > 0:
+        if sharded:
+            src = jax.lax.slice_in_dim(x, size - lo, size, axis=ax)
+            pieces.append(jax.lax.ppermute(
+                src, axis_name, bc.ring_perms(n, +1, periodic)))
+        elif periodic:
+            pieces.append(jax.lax.slice_in_dim(x, size - lo, size, axis=ax))
+        else:
+            shp = list(x.shape); shp[ax] = lo
+            pieces.append(jnp.zeros(shp, x.dtype))
+    pieces.append(x)
+    if hi > 0:
+        if sharded:
+            src = jax.lax.slice_in_dim(x, 0, hi, axis=ax)
+            pieces.append(jax.lax.ppermute(
+                src, axis_name, bc.ring_perms(n, -1, periodic)))
+        elif periodic:
+            pieces.append(jax.lax.slice_in_dim(x, 0, hi, axis=ax))
+        else:
+            shp = list(x.shape); shp[ax] = hi
+            pieces.append(jnp.zeros(shp, x.dtype))
+    if align > 0:
+        shp = list(x.shape); shp[ax] = align
+        pieces.append(jnp.zeros(shp, x.dtype))
+    return jnp.concatenate(pieces, axis=ax) if len(pieces) > 1 else pieces[0]
 
 
 def halo_exchange_pad(x: jnp.ndarray, lo: Sequence[int], hi: Sequence[int],
                       align_hi: Sequence[int], mesh_axes: Sequence,
-                      axis_sizes: Mapping | None = None) -> jnp.ndarray:
-    """Pad a local block with neighbour halos (sharded axes) or zeros.
+                      axis_sizes: Mapping | None = None,
+                      periodic: bool = False) -> jnp.ndarray:
+    """Pad a local block with neighbour halos (sharded axes), wraparound
+    (periodic unsharded axes), or zeros.
 
     ``axis_sizes`` maps mesh-axis name -> size (static, from the mesh); the
     trace environment has no portable size query across jax versions."""
-    ndim = x.ndim
     axis_sizes = axis_sizes or {}
-    for ax in range(ndim):
-        l, h, al = int(lo[ax]), int(hi[ax]), int(align_hi[ax])
+    for ax in range(x.ndim):
         a = mesh_axes[ax] if ax < len(mesh_axes) else None
-        if l == 0 and h == 0 and al == 0:
-            continue
         n = 1 if a is None else int(axis_sizes[a])
-        pieces = []
-        if l > 0:
-            if a is not None and n > 1:
-                src = jax.lax.slice_in_dim(x, x.shape[ax] - l, x.shape[ax], axis=ax)
-                pieces.append(jax.lax.ppermute(
-                    src, a, [(i, i + 1) for i in range(n - 1)]))
-            else:
-                shp = list(x.shape); shp[ax] = l
-                pieces.append(jnp.zeros(shp, x.dtype))
-        pieces.append(x)
-        if h > 0:
-            if a is not None and n > 1:
-                src = jax.lax.slice_in_dim(x, 0, h, axis=ax)
-                pieces.append(jax.lax.ppermute(
-                    src, a, [(i + 1, i) for i in range(n - 1)]))
-            else:
-                shp = list(x.shape); shp[ax] = h
-                pieces.append(jnp.zeros(shp, x.dtype))
-        if al > 0:
-            shp = list(x.shape); shp[ax] = al
-            pieces.append(jnp.zeros(shp, x.dtype))
-        x = jnp.concatenate(pieces, axis=ax)
+        al = int(align_hi[ax]) if ax < len(align_hi) else 0
+        x = _exchange_axis(x, ax, int(lo[ax]), int(hi[ax]), al, a, n, periodic)
     return x
 
 
-def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
-                          mesh_axes: Sequence, *,
-                          plan: DataflowPlan | None = None,
-                          interpret: bool = True, dtype: str = "float32"):
-    """Build fn(fields, scalars, coeffs) running the program SPMD over ``mesh``.
+# --------------------------------------------------------------------------
+# SPMD plumbing shared by the single-step and fused-loop lowerings
+# --------------------------------------------------------------------------
 
-    ``mesh_axes[ax]`` names the mesh axis sharding grid axis ``ax`` (or None).
-    Fields are sharded ``P(*mesh_axes)``; coefficient arrays are replicated
-    and sliced locally ('small data' lives on every chip, paper step 8).
-    """
-    global_grid = tuple(int(g) for g in global_grid)
+def _smap(fn, mesh: Mesh, in_specs, out_specs):
+    try:
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax 0.4.x spells the replication check check_rep
+        return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+
+
+def _origin_inputs(shard: ShardSpec):
+    """(host arrays, in_specs) feeding each shard its global grid offset.
+
+    One 1-D int32 array per grid axis, sharded along that axis's mesh
+    dimension, so every shard reads its own offset as element 0 of its
+    slice.  This deliberately avoids ``lax.axis_index``: its partition-id
+    lowering is rejected by XLA:CPU's SPMD partitioner when it feeds a
+    ``fori_loop`` body, and a data-fed origin also constant-folds a
+    degenerate 1x..x1 mesh to the exact single-device graph."""
+    arrs, specs = [], []
+    for ax, name in enumerate(shard.mesh_axes):
+        n = shard.axis_size(ax)
+        arrs.append(jnp.arange(n, dtype=jnp.int32) * shard.local_grid[ax])
+        specs.append(P(name))
+    return tuple(arrs), tuple(specs)
+
+
+def _origin(shard: ShardSpec, origs) -> jnp.ndarray:
+    """The shard's global offset vector, from its _origin_inputs slices.
+
+    Unsharded (size-1) axes contribute a *static* zero so a degenerate
+    1x..x1 mesh constant-folds to the exact single-device graph."""
+    return jnp.stack([origs[ax][0] if shard.axis_size(ax) > 1
+                      else jnp.int32(0)
+                      for ax in range(len(shard.mesh_axes))])
+
+
+def _degenerate(shard: ShardSpec) -> bool:
+    """True when no grid axis is actually sharded (a 1x..x1 mesh): the
+    distributed access hooks then degrade to the plain local paths, so the
+    compiled graph — and its floating-point rounding — is bit-identical to
+    the single-device lowering."""
+    return all(shard.axis_size(ax) == 1 for ax in range(len(shard.mesh_axes)))
+
+
+def _coeff_reach(p: Program, shard: ShardSpec) -> dict:
+    """coeff name -> (lo, hi) extension covering every CoeffRef offset."""
+    reach = {c: [0, 0] for c in p.coeffs}
+    if _degenerate(shard):
+        return reach       # no origin slicing: coeffs pass through raw
+    for op in p.ops:
+        for c in op.coeff_refs():
+            reach[c.coeff][0] = max(reach[c.coeff][0], -int(c.offset))
+            reach[c.coeff][1] = max(reach[c.coeff][1], int(c.offset))
+    return reach
+
+
+def _jnp_step_hooks(p: Program, shard: ShardSpec, origin, reach: dict):
+    """(shift_fn, coeff_fn) routing jnp-backend accesses across the mesh.
+
+    Both are None on a degenerate mesh — :func:`lower_jnp.lower` then uses
+    its local boundary-aware defaults, keeping the graph bit-identical to
+    the single-device compile."""
+    if _degenerate(shard):
+        return None, None
     ndim = p.ndim
-    mesh_axes = tuple(mesh_axes)[:ndim] + (None,) * (ndim - len(mesh_axes))
-    local_grid = []
-    for ax in range(ndim):
-        n = _axis_size(mesh, mesh_axes[ax])
-        if global_grid[ax] % n:
-            raise ValueError(f"grid axis {ax} ({global_grid[ax]}) not divisible "
-                             f"by mesh axis {mesh_axes[ax]!r} ({n})")
-        local_grid.append(global_grid[ax] // n)
-    local_grid = tuple(local_grid)
 
-    if plan is None:
-        plan = auto_plan(p, local_grid, interpret=interpret, dtype=dtype)
-    jdtype = _DTYPES[plan.dtype]
+    def shift(x, offset, kind):
+        for ax in range(ndim):
+            o = int(offset[ax])
+            if o == 0:
+                continue
+            n_loc = shard.local_grid[ax]
+            if abs(o) > n_loc:
+                raise ValueError(
+                    f"offset {o} on axis {ax} exceeds the local extent "
+                    f"{n_loc} (halo exchange is single-hop)")
+            lo, hi = max(0, -o), max(0, o)
+            xp = _exchange_axis(x, ax, lo, hi, 0, shard.mesh_axes[ax],
+                                shard.axis_size(ax), kind == "periodic")
+            x = jax.lax.slice_in_dim(xp, lo + o, lo + o + n_loc, axis=ax)
+        return x
 
-    calls = [build_group_call(p, grp, plan.block, local_grid, dtype=jdtype,
-                              interpret=plan.interpret,
-                              global_extent=global_grid)
-             for grp in plan.groups]
+    def coeff(cref, coeffs):
+        # coeffs arrive replicated and pre-extended by ``reach`` on the
+        # host; the shard slices its local window at the global origin
+        ax = p.coeffs[cref.coeff]
+        start = origin[ax] + reach[cref.coeff][0] + int(cref.offset)
+        v = jax.lax.dynamic_slice(coeffs[cref.coeff], (start,),
+                                  (shard.local_grid[ax],))
+        shape = [1] * ndim
+        shape[ax] = shard.local_grid[ax]
+        return v.reshape(shape)
 
-    # coeffs: replicate globally, pre-padded so any shard can slice its piece
-    coeff_lo = {c: 0 for c in p.coeffs}
-    coeff_hi = {c: 0 for c in p.coeffs}
+    return shift, coeff
+
+
+def _in_specs(p: Program, shard: ShardSpec, origin_specs, scal_spec) -> tuple:
+    """shard_map input specs: (scalars, fields, coeffs, origin arrays)."""
+    field_spec = P(*shard.mesh_axes)
+    return (scal_spec,
+            {f: field_spec for f in p.input_fields()},
+            {c: P() for c in p.coeffs},
+            origin_specs)
+
+
+def _scalar_io(p: Program, backend: str):
+    """(replicated spec, packer) for the runtime scalars.
+
+    The pallas kernels take one packed SMEM vector; the jnp lowerings take
+    the plain name->value dict — keeping each backend's scalar plumbing
+    identical to its local lowering, so a degenerate mesh bit-matches."""
+    if backend == "pallas":
+        def pack(scalars):
+            return (jnp.asarray([scalars[s] for s in p.scalars],
+                                dtype=jnp.float32)
+                    if p.scalars else jnp.zeros((1,), jnp.float32))
+        return P(), pack
+
+    def pack(scalars):
+        return {s: scalars[s] for s in p.scalars}
+    return {s: P() for s in p.scalars}, pack
+
+
+def _host_coeffs(p: Program, coeffs: Mapping, jdtype, reach: dict) -> dict:
+    """Replicated coefficient arrays, pre-extended by ``reach`` so any shard
+    can slice its piece ('small data' lives on every chip, paper step 8)."""
+    cmode = bc.coeff_mode(p)
+    return {c: bc.pad_coeff(jnp.asarray(coeffs[c], dtype=jdtype),
+                            reach[c][0], reach[c][1], cmode)
+            for c in p.coeffs}
+
+
+def _pallas_coeff_windows(p: Program, calls, coeffs, origin,
+                          shard: ShardSpec, reach: dict) -> list:
+    """Per-call local coefficient windows, sliced at the shard origin."""
+    out = []
+    for call in calls:
+        pc = {}
+        for c in call.group_coeffs:
+            ax = call.coeff_axis[c]
+            start = origin[ax] + reach[c][0] - call.pad_lo[ax]
+            pc[c] = jax.lax.dynamic_slice(
+                coeffs[c], (start,),
+                (shard.local_grid[ax] + call.pad_lo[ax] + call.pad_hi[ax],))
+        out.append(pc)
+    return out
+
+
+def _pallas_reach(calls, p: Program) -> dict:
+    reach = {c: [0, 0] for c in p.coeffs}
     for call in calls:
         for c in call.group_coeffs:
             ax = call.coeff_axis[c]
-            coeff_lo[c] = max(coeff_lo[c], call.pad_lo[ax])
-            coeff_hi[c] = max(coeff_hi[c], call.pad_hi[ax])
+            reach[c][0] = max(reach[c][0], call.pad_lo[ax])
+            reach[c][1] = max(reach[c][1], call.pad_hi[ax])
+    return reach
 
-    field_spec = P(*mesh_axes)
+
+# --------------------------------------------------------------------------
+# single program step under shard_map
+# --------------------------------------------------------------------------
+
+def lower_sharded(p: Program, plan: DataflowPlan, global_grid,
+                  shard: ShardSpec, mesh: Mesh):
+    """Return fn(fields, scalars, coeffs) running one program step SPMD."""
+    global_grid = tuple(int(g) for g in global_grid)
+    jdtype = _DTYPES[plan.dtype]
+    bnd = p.boundaries()
+    backend = plan.backend
+    mesh_axes, axis_sizes = shard.mesh_axes, shard.axis_sizes
     out_names = p.output_fields()
-    n_scalars = len(p.scalars)
+    origin_arrs, origin_specs = _origin_inputs(shard)
+    scal_spec, pack_scalars = _scalar_io(p, backend)
+    in_specs = _in_specs(p, shard, origin_specs, scal_spec)
+    out_specs = tuple(P(*mesh_axes) for _ in out_names)
+    reach = _coeff_reach(p, shard)
 
-    def local_fn(svec, fields, coeffs):
-        origin = []
-        for ax in range(ndim):
-            idx = (jax.lax.axis_index(mesh_axes[ax])
-                   if mesh_axes[ax] is not None else 0)
-            origin.append(jnp.int32(idx * local_grid[ax]))
-        origin = jnp.stack(origin)
+    degen = _degenerate(shard)
+    if backend == "pallas":
+        calls = [build_group_call(p, grp, plan.block, shard.local_grid,
+                                  dtype=jdtype, interpret=plan.interpret,
+                                  global_extent=global_grid)
+                 for grp in plan.groups]
+        if not degen:
+            reach = _pallas_reach(calls, p)
 
-        env = dict(fields)
-        outputs = {}
-        for call in calls:
-            padded = {f: halo_exchange_pad(env[f], call.halo_lo, call.halo_hi,
-                                           call.align_hi, mesh_axes,
-                                           dict(mesh.shape))
-                      for f in call.group_inputs}
-            pc = {}
-            for c in call.group_coeffs:
-                ax = call.coeff_axis[c]
-                start = origin[ax] + coeff_lo[c] - call.pad_lo[ax]
-                pc[c] = jax.lax.dynamic_slice(
-                    coeffs[c], (start,),
-                    (local_grid[ax] + call.pad_lo[ax] + call.pad_hi[ax],))
-            res = call(padded, svec, pc, origin=origin)
-            env.update(res)
-            for f, v in res.items():
-                if p.fields[f].role == FieldRole.OUTPUT:
-                    outputs[f] = v
-        return tuple(outputs[f] for f in out_names)
+        def local_fn(svec, fields, coeffs, origs):
+            origin = _origin(shard, origs)
+            # degenerate mesh: the local pad path, so the graph (and its
+            # rounding) bit-matches the single-device lowering
+            pc_per_call = (_pad_coeffs(p, calls, coeffs, jdtype) if degen
+                           else _pallas_coeff_windows(p, calls, coeffs,
+                                                      origin, shard, reach))
 
-    in_specs = (P(),
-                {f: field_spec for f in p.input_fields()},
-                {c: P() for c in p.coeffs})
-    out_specs = tuple(field_spec for _ in out_names)
-    try:
-        smapped = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # jax 0.4.x spells the replication check check_rep
-        smapped = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
+            def resolve(call, f, env):
+                x = env[f] if f in env else fields[f]
+                if degen:
+                    return bc.pad_field(x, call.halo_lo, call.halo_hi,
+                                        bnd[f], align_hi=call.align_hi), None
+                return halo_exchange_pad(
+                    x, call.halo_lo, call.halo_hi, call.align_hi,
+                    mesh_axes, axis_sizes,
+                    periodic=bnd[f] == "periodic"), None
+
+            outputs = _run_groups(p, calls, svec, pc_per_call, resolve,
+                                  origin=origin)
+            return tuple(outputs[f] for f in out_names)
+    elif backend in ("jnp_fused", "jnp_naive"):
+        mode = backend.removeprefix("jnp_")
+
+        def local_fn(scal, fields, coeffs, origs):
+            origin = _origin(shard, origs)
+            shift, coeff = _jnp_step_hooks(p, shard, origin, reach)
+            step = lower_jnp_step(p, mode, shift_fn=shift, coeff_fn=coeff)
+            outputs = step(fields, scal, coeffs)
+            return tuple(outputs[f] for f in out_names)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    smapped = _smap(local_fn, mesh, in_specs, out_specs)
 
     def run(fields: Mapping, scalars: Mapping | None = None,
             coeffs: Mapping | None = None):
         scalars = scalars or {}
         coeffs = coeffs or {}
-        svec = (jnp.asarray([scalars[s] for s in p.scalars], dtype=jnp.float32)
-                if n_scalars else jnp.zeros((1,), jnp.float32))
-        fdict = {k: jnp.asarray(fields[k], dtype=jdtype)
-                 for k in p.input_fields()}
-        cdict = {c: jnp.pad(jnp.asarray(coeffs[c], dtype=jdtype),
-                            (coeff_lo[c], coeff_hi[c]))
-                 for c in p.coeffs}
-        res = smapped(svec, fdict, cdict)
+        fdict = {f: jnp.asarray(fields[f], dtype=jdtype)
+                 for f in p.input_fields()}
+        cdict = _host_coeffs(p, coeffs, jdtype, reach)
+        res = smapped(pack_scalars(scalars), fdict, cdict, origin_arrs)
         return dict(zip(out_names, res))
 
-    run.local_grid = local_grid
-    run.plan = plan
-    run.mesh_axes = mesh_axes
-    run.field_spec = field_spec
     return run
+
+
+# --------------------------------------------------------------------------
+# fused time loop under shard_map (carry-resident halo exchange)
+# --------------------------------------------------------------------------
+
+def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
+                            spec: TimeLoopSpec, update, mesh: Mesh):
+    """Return fn(fields, scalars, coeffs) -> final fields after
+    ``spec.steps`` distributed iterations — ONE jitted dispatch.
+
+    Structure (all inside ``shard_map``, so it traces once per compile):
+
+        carry = per-field local buffers padded to the worst-group halo
+        fori_loop body:
+            refresh halo slabs from the carry interiors (ppermute rings /
+                local wrap / zeros, axis by axis so corners are exact)
+            run the fuse groups against the refreshed buffers
+            trace ``update`` once; write the new interiors back
+
+    The final interiors are sliced out after the loop; no per-step host
+    sync, no per-step re-dispatch, no re-tracing of ``update``.
+    """
+    shard = spec.shard
+    if shard is None:
+        raise ValueError("spec has no ShardSpec; use the local lowerings")
+    global_grid = tuple(int(g) for g in global_grid)
+    ndim = p.ndim
+    jdtype = _DTYPES[plan.dtype]
+    bnd = p.boundaries()
+    backend = plan.backend
+    mesh_axes, axis_sizes = shard.mesh_axes, shard.axis_sizes
+    local_grid = shard.local_grid
+    fpad = spec.field_pad
+    align = spec.align_hi or (0,) * ndim
+    interior = {f: tuple(slice(int(fpad[f][a, 0]),
+                               int(fpad[f][a, 0]) + local_grid[a])
+                         for a in range(ndim))
+                for f in spec.persistent}
+    carry_pads = {f: tuple((int(fpad[f][a, 0]), int(fpad[f][a, 1]))
+                           for a in range(ndim))
+                  for f in spec.persistent}
+
+    def _needs_refresh(f) -> bool:
+        # a field's carry halos go stale each step only if they hold
+        # wraparound values (periodic) or neighbour data (sharded axis);
+        # zero halos on unsharded axes are invariant — skipping their
+        # rebuild also lets a degenerate 1x..x1 mesh fold to the exact
+        # single-device graph
+        for a in range(ndim):
+            lo = int(fpad[f][a, 0])
+            hi = int(fpad[f][a, 1]) - int(align[a])
+            if lo == 0 and hi == 0:
+                continue
+            if bnd[f] == "periodic" or shard.axis_size(a) > 1:
+                return True
+        return False
+
+    refreshed = {f for f in spec.persistent if _needs_refresh(f)}
+
+    def refresh(f, carry_f):
+        # carry-resident halo refresh: lo/hi halos per the field's
+        # boundary, zero lane-alignment slab on the hi side
+        if f not in refreshed:
+            return carry_f
+        return halo_exchange_pad(
+            carry_f[interior[f]], fpad[f][:, 0],
+            [int(fpad[f][a, 1]) - int(align[a]) for a in range(ndim)],
+            align, mesh_axes, axis_sizes, periodic=bnd[f] == "periodic")
+
+    origin_arrs, origin_specs = _origin_inputs(shard)
+    scal_spec, pack_scalars = _scalar_io(p, backend)
+    in_specs = _in_specs(p, shard, origin_specs, scal_spec)
+    out_specs = tuple(P(*mesh_axes) for _ in spec.persistent)
+
+    degen = _degenerate(shard)
+    if backend == "pallas":
+        calls = [build_group_call(p, grp, plan.block, local_grid,
+                                  dtype=jdtype, interpret=plan.interpret,
+                                  global_extent=global_grid)
+                 for grp in plan.groups]
+        reach = (_coeff_reach(p, shard) if degen
+                 else _pallas_reach(calls, p))
+
+        def make_step(origin, coeffs):
+            # degenerate mesh: the local pad path, so the graph (and its
+            # rounding) bit-matches the single-device fused loop
+            pc_per_call = (_pad_coeffs(p, calls, coeffs, jdtype) if degen
+                           else _pallas_coeff_windows(p, calls, coeffs,
+                                                      origin, shard, reach))
+
+            def step(fresh, svec):
+                def resolve(call, f, env):
+                    if f in fresh:      # persistent: window from the carry
+                        return fresh[f], fpad[f]
+                    # transient inter-group: exchange to the call's geometry
+                    if degen:
+                        return bc.pad_field(env[f], call.halo_lo,
+                                            call.halo_hi, bnd[f],
+                                            align_hi=call.align_hi), None
+                    return halo_exchange_pad(
+                        env[f], call.halo_lo, call.halo_hi, call.align_hi,
+                        mesh_axes, axis_sizes,
+                        periodic=bnd[f] == "periodic"), None
+
+                return _run_groups(p, calls, svec, pc_per_call, resolve,
+                                   origin=origin)
+
+            return step
+    elif backend in ("jnp_fused", "jnp_naive"):
+        mode = backend.removeprefix("jnp_")
+        reach = _coeff_reach(p, shard)
+
+        def make_step(origin, coeffs):
+            shift, coeff = _jnp_step_hooks(p, shard, origin, reach)
+            raw = lower_jnp_step(p, mode, prepad=fpad, shift_fn=shift,
+                                 coeff_fn=coeff)
+
+            def step(fresh, scal):
+                return raw(fresh, scal, coeffs)
+
+            return step
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def local_fn(scal, fields, coeffs, origs):
+        origin = _origin(shard, origs)
+        step = make_step(origin, coeffs)
+        # initial carry: zero-padded; the loop body refreshes halos before
+        # the first compute, so the fill value is never observed
+        carry = {f: jnp.pad(fields[f], carry_pads[f])
+                 for f in spec.persistent}
+
+        def body(_, carry):
+            fresh = {f: refresh(f, carry[f]) for f in spec.persistent}
+            outputs = step(fresh, scal)
+            cur = {f: fresh[f][interior[f]] for f in spec.persistent}
+            new = dict(cur)
+            new.update(update(cur, outputs))
+            out = {}
+            for f in spec.persistent:
+                if spec.carry_write == "inplace":
+                    out[f] = fresh[f].at[interior[f]].set(
+                        jnp.asarray(new[f], dtype=jdtype))
+                else:   # "repad": halos are rebuilt next iteration anyway
+                    out[f] = jnp.pad(jnp.asarray(new[f], dtype=jdtype),
+                                     carry_pads[f])
+            return out
+
+        carry = jax.lax.fori_loop(0, spec.steps, body, carry)
+        return tuple(carry[f][interior[f]] for f in spec.persistent)
+
+    smapped = _smap(local_fn, mesh, in_specs, out_specs)
+
+    def run(fields: Mapping, scalars: Mapping | None = None,
+            coeffs: Mapping | None = None):
+        scalars = scalars or {}
+        coeffs = coeffs or {}
+        fdict = {f: jnp.asarray(fields[f], dtype=jdtype)
+                 for f in p.input_fields()}
+        cdict = _host_coeffs(p, coeffs, jdtype, reach)
+        res = smapped(pack_scalars(scalars), fdict, cdict, origin_arrs)
+        return dict(zip(spec.persistent, res))
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# deprecated standalone entry point
+# --------------------------------------------------------------------------
+
+def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
+                          mesh_axes: Sequence, *,
+                          plan: DataflowPlan | None = None,
+                          backend: str = "pallas",
+                          interpret: bool = True, dtype: str = "float32"):
+    """Deprecated: use ``compile_program(p, grid, mesh=..., mesh_axes=...)``.
+
+    Kept as a thin forwarding wrapper so existing callers keep working;
+    the returned executable is a :class:`CompiledStencil` with the legacy
+    ``local_grid`` / ``mesh_axes`` / ``field_spec`` attributes attached.
+    """
+    warnings.warn(
+        "make_sharded_executor is deprecated; call "
+        "compile_program(p, grid, mesh=..., mesh_axes=...) instead",
+        DeprecationWarning, stacklevel=2)
+    from .pipeline import compile_program
+    ex = compile_program(p, global_grid, backend=backend, plan=plan,
+                         interpret=interpret, dtype=dtype,
+                         mesh=mesh, mesh_axes=mesh_axes)
+    ex.local_grid = ex.shard.local_grid
+    ex.mesh_axes = ex.shard.mesh_axes
+    ex.field_spec = P(*ex.shard.mesh_axes)
+    return ex

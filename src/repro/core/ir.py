@@ -157,6 +157,9 @@ class FieldDecl:
     name: str
     role: FieldRole
     dtype: str = "float32"
+    # how reads outside the domain resolve: "zero" (historical convention)
+    # or "periodic" (torus wraparound) — see repro.core.boundary
+    boundary: str = "zero"
 
 
 @dataclasses.dataclass
@@ -231,6 +234,38 @@ class Program:
         for n, f in self.fields.items():
             if f.role in (FieldRole.OUTPUT, FieldRole.TEMP) and n not in produced:
                 raise ValueError(f"declared output {n!r} never produced")
+        from .boundary import validate_boundaries
+        validate_boundaries(self)
+
+    def boundaries(self) -> dict:
+        """field name -> boundary kind ("zero" | "periodic")."""
+        return {n: f.boundary for n, f in self.fields.items()}
+
+    def is_torus(self) -> bool:
+        """True when every field is periodic (the whole domain wraps)."""
+        return all(f.boundary == "periodic" for f in self.fields.values())
+
+    def with_boundary(self, spec) -> "Program":
+        """A copy of this program with boundaries replaced.
+
+        ``spec`` is either a single kind applied to every field (the usual
+        torus/zero toggle) or a mapping ``{field: kind}`` overriding only
+        the named fields.  The copy is re-validated.
+        """
+        if isinstance(spec, str):
+            spec = {n: spec for n in self.fields}
+        unknown = set(spec) - set(self.fields)
+        if unknown:
+            raise ValueError(f"with_boundary: unknown field(s) "
+                             f"{sorted(unknown)}; fields are "
+                             f"{sorted(self.fields)}")
+        fields = {n: dataclasses.replace(f, boundary=spec.get(n, f.boundary))
+                  for n, f in self.fields.items()}
+        p = Program(name=self.name, ndim=self.ndim, fields=fields,
+                    scalars=list(self.scalars), ops=list(self.ops),
+                    coeffs=dict(self.coeffs))
+        p.validate()
+        return p
 
     def input_fields(self) -> list:
         return [n for n, f in self.fields.items() if f.role == FieldRole.INPUT]

@@ -22,34 +22,35 @@ from typing import Mapping
 import jax.numpy as jnp
 import numpy as np
 
+from . import boundary as bc
 from .expr_eval import evaluate
 from .ir import Access, FieldRole, Program
 
 
-def shifted(x: jnp.ndarray, offset, pad_value: float = 0.0) -> jnp.ndarray:
-    """out[i] = x[i + offset], reading 0 outside the domain."""
-    h = int(max(abs(int(o)) for o in offset)) if len(offset) else 0
-    if h == 0 and all(int(o) == 0 for o in offset):
-        return x
-    xp = jnp.pad(x, h, constant_values=pad_value)
-    idx = tuple(slice(h + int(offset[ax]), h + int(offset[ax]) + x.shape[ax])
-                for ax in range(x.ndim))
-    return xp[idx]
-
-
-def lower(p: Program, mode: str = "fused", prepad: Mapping | None = None):
+def lower(p: Program, mode: str = "fused", prepad: Mapping | None = None,
+          shift_fn=None, coeff_fn=None):
     """Return fn(fields, scalars) -> dict of output arrays.
 
     With ``prepad`` (field name -> (ndim, 2) halo widths) the external input
-    fields must arrive *already zero-padded* by those amounts; every Access
-    then resolves to a static slice of the persistent padded buffer instead
-    of a fresh ``jnp.pad`` — the access path the fused time loop uses for its
-    carry-resident fields.  Temps produced mid-program stay interior-shaped
-    and keep the pad-on-access path.
+    fields must arrive *already padded* by those amounts (halo slabs filled
+    per the field's boundary by the caller); every Access then resolves to a
+    static slice of the persistent padded buffer instead of a fresh pad —
+    the access path the fused time loop uses for its carry-resident fields.
+    Temps produced mid-program stay interior-shaped and keep the
+    shift-on-access path, which honours each field's declared boundary
+    (zero extension or torus wraparound).
+
+    ``shift_fn(x, offset, boundary)`` overrides the shift-on-access path and
+    ``coeff_fn(cref, coeffs)`` the coefficient read — the hooks the
+    distributed executor uses to route accesses through ``ppermute`` and to
+    slice replicated coefficient arrays at the shard origin.
     """
     if mode not in ("naive", "fused"):
         raise ValueError(mode)
     prepadded = set(prepad or {})
+    bnd = p.boundaries()
+    cmode = bc.coeff_mode(p)
+    shift = shift_fn or bc.shift_field
 
     def run(fields: Mapping[str, jnp.ndarray],
             scalars: Mapping[str, jnp.ndarray] | None = None,
@@ -70,8 +71,10 @@ def lower(p: Program, mode: str = "fused", prepad: Mapping | None = None):
                              for ax in range(p.ndim))
 
         def coeff(c):
+            if coeff_fn is not None:
+                return coeff_fn(c, coeffs)
             ax = p.coeffs[c.coeff]
-            v = shifted(coeffs[c.coeff], (c.offset,))
+            v = bc.shift_field(coeffs[c.coeff], (c.offset,), cmode)
             shape = [1] * p.ndim
             shape[ax] = v.shape[0]
             return v.reshape(shape)
@@ -87,7 +90,7 @@ def lower(p: Program, mode: str = "fused", prepad: Mapping | None = None):
                                      + interior[ax])
                                for ax in range(p.ndim))
                     return env[a.field][sl]
-                return shifted(env[a.field], a.offset)
+                return shift(env[a.field], a.offset, bnd[a.field])
 
             res = evaluate(op.expr, access, lambda n: scalars[n], memo,
                            coeff=coeff)
@@ -108,11 +111,14 @@ def lower_time_loop(p: Program, mode: str, spec, update):
     persistent input fields pre-padded by ``spec.field_pad``; every step the
     step body reads windows out of the carry (static slices, no ``jnp.pad``)
     and the traced ``update(fields, outputs)`` writes the new interiors back
-    in place.  Halo slabs stay zero throughout (zero-halo convention).
+    in place.  Halo slabs follow each field's boundary: zero slabs stay
+    zero throughout; periodic slabs are rebuilt from the new interior every
+    step (the wraparound values change with it).
     """
     import jax
 
     fpad = spec.field_pad
+    bnd = p.boundaries()
     step_fn = lower(p, mode, prepad=fpad)
 
     def run(fields: Mapping, scalars: Mapping | None = None,
@@ -125,10 +131,11 @@ def lower_time_loop(p: Program, mode: str, spec, update):
                                    int(fpad[f][a, 0]) + shape[a])
                              for a in range(ndim))
                     for f in spec.persistent}
-        pads = {f: tuple((int(fpad[f][a, 0]), int(fpad[f][a, 1]))
-                         for a in range(ndim))
-                for f in spec.persistent}
-        carry = {f: jnp.pad(jnp.asarray(fields[f]), pads[f])
+
+        def refill(f, x):
+            return bc.pad_field(x, fpad[f][:, 0], fpad[f][:, 1], bnd[f])
+
+        carry = {f: refill(f, jnp.asarray(fields[f]))
                  for f in spec.persistent}
 
         def body(_, carry):
@@ -136,11 +143,16 @@ def lower_time_loop(p: Program, mode: str, spec, update):
             cur = {f: carry[f][interior[f]] for f in spec.persistent}
             new = dict(cur)
             new.update(update(cur, outs))
-            if spec.carry_write == "inplace":
-                return {f: carry[f].at[interior[f]].set(new[f])
-                        for f in spec.persistent}
-            # "repad": constant zero halo -> one fused interior write
-            return {f: jnp.pad(new[f], pads[f]) for f in spec.persistent}
+            out = {}
+            for f in spec.persistent:
+                if spec.carry_write == "inplace" and bnd[f] == "zero":
+                    # zero halos never change: scatter the interior only
+                    out[f] = carry[f].at[interior[f]].set(new[f])
+                else:
+                    # one fused interior write + constant (zero) or
+                    # refreshed (wraparound) halo slabs
+                    out[f] = refill(f, new[f])
+            return out
 
         carry = jax.lax.fori_loop(0, spec.steps, body, carry)
         return {f: carry[f][interior[f]] for f in spec.persistent}

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.stencil3d import build_group_call
+from . import boundary as bc
 from .ir import Program
 from .schedule import DataflowPlan, TimeLoopSpec
 
@@ -23,24 +24,27 @@ _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.floa
 
 def _pad_coeffs(p: Program, calls, coeffs, dtype):
     """Per-call padded coefficient windows ('small data', paper step 8)."""
+    cmode = bc.coeff_mode(p)
     out = []
     for call in calls:
         pc = {}
         for c in call.group_coeffs:
             ax = call.coeff_axis[c]
-            pc[c] = jnp.pad(jnp.asarray(coeffs[c], dtype=dtype),
-                            (call.pad_lo[ax], call.pad_hi[ax]))
+            pc[c] = bc.pad_coeff(jnp.asarray(coeffs[c], dtype=dtype),
+                                 call.pad_lo[ax], call.pad_hi[ax], cmode)
         out.append(pc)
     return out
 
 
-def _run_groups(p: Program, calls, svec, pc_per_call, resolve_input):
+def _run_groups(p: Program, calls, svec, pc_per_call, resolve_input,
+                origin=None):
     """Run the fuse groups in order, materialising inter-group fields.
 
     ``resolve_input(call, f, env) -> (array, actual_pad | None)`` supplies
     each group input: either freshly padded to the call's window geometry
     (pad None) or an oversized persistent buffer with its actual padding,
     which the kernel slices its window out of via ``input_pad``.
+    ``origin`` is the shard's global offset under a mesh (None locally).
     """
     env: dict = {}
     outputs: dict = {}
@@ -50,7 +54,7 @@ def _run_groups(p: Program, calls, svec, pc_per_call, resolve_input):
             padded[f], actual = resolve_input(call, f, env)
             if actual is not None:
                 ipad[f] = actual
-        res = call(padded, svec, pc, input_pad=ipad or None)
+        res = call(padded, svec, pc, input_pad=ipad or None, origin=origin)
         env.update(res)
         for f, v in res.items():
             if p.fields[f].role.value == "output":
@@ -77,11 +81,12 @@ def lower(p: Program, plan: DataflowPlan, grid_shape):
         scalars = scalars or {}
         coeffs = coeffs or {}
         ext = {k: jnp.asarray(v, dtype=dtype) for k, v in fields.items()}
+        bnd = p.boundaries()
 
         def resolve(call, f, env):
-            pads = tuple((call.pad_lo[a], call.pad_hi[a])
-                         for a in range(p.ndim))
-            return jnp.pad(env[f] if f in env else ext[f], pads), None
+            x = env[f] if f in env else ext[f]
+            return bc.pad_field(x, call.halo_lo, call.halo_hi, bnd[f],
+                                align_hi=call.align_hi), None
 
         return _run_groups(p, calls, _scalar_vec(p, scalars),
                            _pad_coeffs(p, calls, coeffs, dtype), resolve)
@@ -97,11 +102,13 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
     The carry of a ``lax.fori_loop`` holds one *pre-padded* persistent buffer
     per program input field, sized by ``spec.field_pad`` so every consuming
     fuse group can slice its window geometry straight out of it (the kernel's
-    ``input_pad`` path).  Halo slabs are zero under the zero-halo convention
-    and never change, so writing the back buffer each step touches only the
-    interior — either scattered in place (``carry_write="inplace"``) or
+    ``input_pad`` path).  Halo slabs follow each field's boundary: zero
+    slabs never change, so writing the back buffer each step touches only
+    the interior — either scattered in place (``carry_write="inplace"``) or
     rebuilt as one fused interior-plus-constant-halo write (``"repad"``,
-    the default; see :class:`TimeLoopSpec`).  XLA donates the loop carry,
+    the default; see :class:`TimeLoopSpec`); periodic slabs are rebuilt
+    from the new interior (the wraparound values change with it).  XLA
+    donates the loop carry,
     giving the front/back buffer swap ``spec.double_buffer`` assigns.
     Coefficients are loop-invariant and padded once, outside the loop.
     """
@@ -112,13 +119,20 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
                               interpret=plan.interpret)
              for grp in plan.groups]
     fpad = spec.field_pad
+    bnd = p.boundaries()
+    align = spec.align_hi or (0,) * ndim
     interior = {f: tuple(slice(int(fpad[f][a, 0]),
                                int(fpad[f][a, 0]) + grid_shape[a])
                          for a in range(ndim))
                 for f in spec.persistent}
-    carry_pads = {f: tuple((int(fpad[f][a, 0]), int(fpad[f][a, 1]))
-                           for a in range(ndim))
-                  for f in spec.persistent}
+
+    def refill(f, x):
+        # halo slabs per the field's boundary; the lane-alignment slab
+        # (inside fpad[:, 1]) is always zero — never read in-domain
+        return bc.pad_field(x, fpad[f][:, 0],
+                            [int(fpad[f][a, 1]) - int(align[a])
+                             for a in range(ndim)],
+                            bnd[f], align_hi=align)
 
     def run(fields: Mapping, scalars: Mapping | None = None,
             coeffs: Mapping | None = None):
@@ -129,31 +143,31 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
         # once, before the loop ("small data" stays resident)
         pc_per_call = _pad_coeffs(p, calls, coeffs, dtype)
         # pad the persistent carry buffers exactly once
-        carry = {f: jnp.pad(jnp.asarray(fields[f], dtype=dtype),
-                            carry_pads[f])
+        carry = {f: refill(f, jnp.asarray(fields[f], dtype=dtype))
                  for f in spec.persistent}
 
         def body(_, carry):
             def resolve(call, f, env):
                 if f in carry:              # persistent: window from carry
                     return carry[f], fpad[f]
-                pads = tuple((call.pad_lo[a], call.pad_hi[a])
-                             for a in range(ndim))
-                return jnp.pad(env[f], pads), None  # transient inter-group
+                return bc.pad_field(env[f], call.halo_lo, call.halo_hi,
+                                    bnd[f], align_hi=call.align_hi), None
 
             outputs = _run_groups(p, calls, svec, pc_per_call, resolve)
             cur = {f: carry[f][interior[f]] for f in spec.persistent}
             new = dict(cur)
             new.update(update(cur, outputs))
-            if spec.carry_write == "inplace":
-                return {f: carry[f].at[interior[f]].set(
-                            jnp.asarray(new[f], dtype=dtype))
-                        for f in spec.persistent}
-            # "repad": the halo slabs are constant zeros, so the back buffer
-            # is one fused interior write + constant halo — no carry RMW
-            return {f: jnp.pad(jnp.asarray(new[f], dtype=dtype),
-                               carry_pads[f])
-                    for f in spec.persistent}
+            out = {}
+            for f in spec.persistent:
+                if spec.carry_write == "inplace" and bnd[f] == "zero":
+                    # zero halos never change: scatter the interior only
+                    out[f] = carry[f].at[interior[f]].set(
+                        jnp.asarray(new[f], dtype=dtype))
+                else:
+                    # one fused interior write + constant (zero) or
+                    # refreshed (wraparound) halo slabs — no carry RMW
+                    out[f] = refill(f, jnp.asarray(new[f], dtype=dtype))
+            return out
 
         carry = jax.lax.fori_loop(0, spec.steps, body, carry)
         return {f: carry[f][interior[f]] for f in spec.persistent}

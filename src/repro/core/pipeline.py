@@ -20,9 +20,14 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from . import lower_jnp, lower_pallas
+from . import distribute, lower_jnp, lower_pallas
 from .ir import Program
-from .schedule import DataflowPlan, TimeLoopSpec, auto_plan, plan_time_loop
+from .passes import infer_halo
+from .schedule import (DataflowPlan, ShardSpec, TimeLoopSpec, auto_plan,
+                       make_shard_spec, normalize_mesh_axes, plan_time_loop,
+                       shard_local_grid)
+
+_BACKENDS = ("pallas", "jnp_fused", "jnp_naive")
 
 
 @dataclasses.dataclass
@@ -35,6 +40,8 @@ class CompiledStencil:
     # fused time loop (``steps=N``): the executable returns the *final
     # fields* after N on-device iterations instead of one step's outputs
     time_spec: TimeLoopSpec | None = None
+    # SPMD compile (``mesh=...``): the distributed layout; None = local
+    shard: ShardSpec | None = None
 
     def __call__(self, fields: Mapping, scalars: Mapping | None = None,
                  coeffs: Mapping | None = None) -> dict:
@@ -46,8 +53,10 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
                     interpret: bool = True, dtype: str = "float32",
                     strategy: str = "auto", steps: int | None = None,
                     update=None, carry_write: str | None = None,
-                    tune_config=None, plan_cache=None) -> CompiledStencil:
-    """Compile ``p`` for ``grid``.
+                    tune_config=None, plan_cache=None,
+                    mesh=None, mesh_axes=None,
+                    boundary=None) -> CompiledStencil:
+    """Compile ``p`` for ``grid`` — local or SPMD, single-step or fused loop.
 
     With ``steps=N`` and an ``update(fields, outputs) -> fields`` rule, the
     whole time loop is lowered into the compiled program (one ``jax.jit``
@@ -56,6 +65,18 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
     executable then maps initial fields to the fields after N steps —
     exactly N iterations of :func:`run_time_loop`, without N dispatches,
     N ``jnp.pad`` rounds, or N host round trips.
+
+    With ``mesh=`` (a ``jax.sharding.Mesh``) and ``mesh_axes=`` (mesh axis
+    name per grid axis, None entries unsharded), the same program compiles
+    SPMD: fields are domain-decomposed ``P(*mesh_axes)``, halos travel by
+    ``ppermute``, and the plan is priced against the per-shard *local*
+    block.  Combined with ``steps=N`` the halo exchange moves inside the
+    fused loop carry — N distributed steps in one dispatch (see
+    :func:`repro.core.distribute.lower_sharded_time_loop`).
+
+    ``boundary=`` overrides the program's per-field boundary declarations
+    before compiling: a single kind (``"zero"`` / ``"periodic"`` for a
+    torus) or a ``{field: kind}`` mapping (see ``Program.with_boundary``).
 
     ``strategy="tuned"`` replaces the ``auto_plan`` heuristic with the
     measured search of :mod:`repro.core.tune`: the persistent plan cache is
@@ -69,6 +90,23 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
         raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+    if boundary is not None:
+        p = p.with_boundary(boundary)
+
+    ndim = p.ndim
+    if mesh is not None:
+        if mesh_axes is None:
+            mesh_axes = tuple(mesh.axis_names)
+        mesh_axes = normalize_mesh_axes(mesh_axes, ndim)
+        # the planner prices VMEM blocks against the per-shard local grid
+        plan_grid = shard_local_grid(grid, mesh, mesh_axes)
+    elif mesh_axes is not None:
+        raise ValueError("mesh_axes requires mesh=")
+    else:
+        plan_grid = grid
+
     tuned_cw = None
     if plan is None:
         if strategy == "tuned":
@@ -76,42 +114,62 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
             res = tune.get_tuned_plan(p, grid, backend=backend,
                                       interpret=interpret, dtype=dtype,
                                       update=update, config=tune_config,
-                                      cache=plan_cache)
+                                      cache=plan_cache,
+                                      mesh=mesh, mesh_axes=mesh_axes)
             plan, tuned_cw = res.plan, res.carry_write
         else:
-            plan = auto_plan(p, grid, backend=backend, interpret=interpret,
-                             dtype=dtype, strategy=strategy, steps=steps)
-    plan.backend = backend
+            plan = auto_plan(p, plan_grid, backend=backend,
+                             interpret=interpret, dtype=dtype,
+                             strategy=strategy, steps=steps)
+    # plans can be shared (PlanCache entries, caller-held objects): the
+    # compiled executable always gets its own deep copy, retargeted to the
+    # requested backend/mesh, so no compile ever mutates another's plan
+    overrides = {}
+    if plan.backend != backend:
+        overrides["backend"] = backend
+    if mesh is not None and plan.mesh_axes_for(ndim) != mesh_axes:
+        overrides["mesh_axes"] = mesh_axes
+    plan = dataclasses.replace(plan, groups=[list(g) for g in plan.groups],
+                               **overrides)
     if carry_write is None:
         carry_write = tuned_cw or "repad"
+
+    shard = None
+    group_halos = None
+    if mesh is not None:
+        # halo inference per fuse group is shared by the shard spec and the
+        # time-loop carry sizing — compute it once
+        group_halos = [infer_halo(p, grp) for grp in plan.groups]
+        shard = make_shard_spec(p, plan, grid, mesh, mesh_axes,
+                                group_halos=group_halos)
 
     time_spec = None
     if steps is not None:
         if update is None:
             raise ValueError("steps=N requires an update(fields, outputs) "
                              "rule to close the time loop")
-        time_spec = plan_time_loop(p, plan, grid, steps,
-                                   carry_write=carry_write)
-        if backend == "pallas":
+        time_spec = plan_time_loop(p, plan, plan_grid, steps,
+                                   carry_write=carry_write, shard=shard,
+                                   group_halos=group_halos)
+        if mesh is not None:
+            raw = distribute.lower_sharded_time_loop(p, plan, grid,
+                                                     time_spec, update, mesh)
+        elif backend == "pallas":
             raw = lower_pallas.lower_time_loop(p, plan, grid, time_spec,
                                                update)
-        elif backend in ("jnp_fused", "jnp_naive"):
+        else:
             raw = lower_jnp.lower_time_loop(p, backend.removeprefix("jnp_"),
                                             time_spec, update)
-        else:
-            raise ValueError(f"unknown backend {backend!r}")
+    elif mesh is not None:
+        raw = distribute.lower_sharded(p, plan, grid, shard, mesh)
     elif backend == "pallas":
         raw = lower_pallas.lower(p, plan, grid)
-    elif backend == "jnp_fused":
-        raw = lower_jnp.lower(p, mode="fused")
-    elif backend == "jnp_naive":
-        raw = lower_jnp.lower(p, mode="naive")
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        raw = lower_jnp.lower(p, mode=backend.removeprefix("jnp_"))
 
     fn = jax.jit(raw) if jit else raw
     return CompiledStencil(program=p, plan=plan, grid=grid, _fn=fn,
-                           jitted=jit, time_spec=time_spec)
+                           jitted=jit, time_spec=time_spec, shard=shard)
 
 
 def run_time_loop(ex: CompiledStencil, fields: dict, scalars: dict,

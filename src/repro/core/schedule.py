@@ -56,8 +56,7 @@ class DataflowPlan:
 
     def mesh_axes_for(self, ndim: int) -> tuple:
         """Mesh axis names normalised to ``ndim`` entries (None = unsharded)."""
-        ma = tuple(self.mesh_axes or ())
-        return ma[:ndim] + (None,) * (ndim - len(ma))
+        return normalize_mesh_axes(self.mesh_axes, ndim)
 
     def describe(self) -> str:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
@@ -103,11 +102,106 @@ def program_fingerprint(p: Program) -> str:
     programs with the same fingerprint lower identically, so a tuned plan is
     transferable between them."""
     parts = [p.to_text()]
-    parts += [f"field:{n}:{f.role.value}:{f.dtype}"
+    parts += [f"field:{n}:{f.role.value}:{f.dtype}:{f.boundary}"
               for n, f in sorted(p.fields.items())]
     parts += [f"coeff:{c}:{ax}" for c, ax in sorted(p.coeffs.items())]
     parts.append(f"scalars:{','.join(p.scalars)}")
     return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class ShardSpec:
+    """Distributed layout of one compiled executable (paper step 9: one AXI
+    bundle / HBM bank per field; here one mesh shard per sub-domain).
+
+    Derived by :func:`make_shard_spec` from the plan's fuse groups: each
+    field's halo depth is the elementwise max over every consuming group's
+    window halo, so one carry-resident exchange per field per step serves
+    all groups (they slice their own window geometry out of the exchanged
+    buffer).  The planner prices blocks against ``local_grid``, never the
+    global domain.
+    """
+
+    # mesh axis name per grid axis (None = unsharded axis)
+    mesh_axes: tuple
+    # mesh axis name -> number of shards along it
+    axis_sizes: dict
+    local_grid: tuple
+    global_grid: tuple
+    # field -> (ndim, 2) halo depth of the worst consuming fuse group
+    field_halo: dict
+
+    def axis_size(self, ax: int) -> int:
+        name = self.mesh_axes[ax]
+        return 1 if name is None else int(self.axis_sizes[name])
+
+    def describe(self) -> str:
+        parts = []
+        for ax, name in enumerate(self.mesh_axes):
+            parts.append(f"{name or '-'}:{self.axis_size(ax)}")
+        return (f"shard(mesh=[{','.join(parts)}], local={self.local_grid}, "
+                f"global={self.global_grid})")
+
+
+def normalize_mesh_axes(mesh_axes: Sequence, ndim: int) -> tuple:
+    """Mesh axis names truncated/padded to ``ndim`` entries (None = unsharded)
+    — the one normalization every layer (pipeline, tuner, shard spec) uses."""
+    ma = tuple(mesh_axes or ())
+    return ma[:ndim] + (None,) * (ndim - len(ma))
+
+
+def shard_local_grid(global_grid: Sequence[int], mesh, mesh_axes: Sequence
+                     ) -> tuple:
+    """Per-shard sub-domain extents; validates mesh/grid divisibility."""
+    global_grid = tuple(int(g) for g in global_grid)
+    out = []
+    for ax, g in enumerate(global_grid):
+        name = mesh_axes[ax] if ax < len(mesh_axes) else None
+        n = 1 if name is None else int(mesh.shape[name])
+        if g % n:
+            raise ValueError(f"grid axis {ax} ({g}) not divisible by mesh "
+                             f"axis {name!r} ({n})")
+        out.append(g // n)
+    return tuple(out)
+
+
+def make_shard_spec(p: Program, plan: DataflowPlan, global_grid: Sequence[int],
+                    mesh, mesh_axes: Sequence,
+                    group_halos: list | None = None) -> ShardSpec:
+    """Build the :class:`ShardSpec` for ``plan`` over ``mesh``.
+
+    Halo exchange is single-hop (each shard talks to its immediate
+    neighbours), so a field's halo may not exceed the local extent of a
+    sharded axis — violations raise here, at plan time, not inside the
+    traced loop.  Pass ``group_halos`` (one :func:`infer_halo` result per
+    fuse group) to reuse halos the caller already computed.
+    """
+    ndim = p.ndim
+    mesh_axes = normalize_mesh_axes(mesh_axes, ndim)
+    local_grid = shard_local_grid(global_grid, mesh, mesh_axes)
+    if group_halos is None:
+        group_halos = [infer_halo(p, grp) for grp in plan.groups]
+    field_halo = {}
+    for gh in group_halos:
+        for f in gh.group_inputs:
+            cur = field_halo.get(f)
+            field_halo[f] = (np.array(gh.input_halo) if cur is None
+                             else np.maximum(cur, gh.input_halo))
+    axis_sizes = {str(k): int(v) for k, v in dict(mesh.shape).items()}
+    for ax, name in enumerate(mesh_axes):
+        if name is None or axis_sizes.get(str(name), 1) == 1:
+            continue
+        for f, h in field_halo.items():
+            if max(int(h[ax, 0]), int(h[ax, 1])) > local_grid[ax]:
+                raise ValueError(
+                    f"halo of field {f!r} on axis {ax} "
+                    f"({int(h[ax, 0])},{int(h[ax, 1])}) exceeds the local "
+                    f"extent {local_grid[ax]}; coarsen the mesh axis "
+                    f"{name!r} or enlarge the grid")
+    return ShardSpec(mesh_axes=mesh_axes, axis_sizes=axis_sizes,
+                     local_grid=local_grid,
+                     global_grid=tuple(int(g) for g in global_grid),
+                     field_halo=field_halo)
 
 
 @dataclasses.dataclass
@@ -142,6 +236,13 @@ class TimeLoopSpec:
     #   "inplace" — scatter the new interior into the carry
     #               (dynamic-update-slice; aliases on TPU)
     carry_write: str = "repad"
+    # hi-side lane-tile alignment slab per axis, already folded into
+    # field_pad[:, 1]; kept separately so halo refresh (periodic wrap,
+    # distributed ppermute) can treat it as a plain zero slab
+    align_hi: tuple = ()
+    # distributed layout when the loop runs under shard_map; None = local.
+    # With a shard, every extent in this spec is per-shard (local_grid).
+    shard: ShardSpec | None = None
 
     def describe(self) -> str:
         bufs = ", ".join(f"{f}:{a}/{b}" for f, (a, b)
@@ -153,7 +254,8 @@ class TimeLoopSpec:
 
 def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
                    steps: int, carry_write: str = "repad",
-                   group_halos: list | None = None) -> TimeLoopSpec:
+                   group_halos: list | None = None,
+                   shard: ShardSpec | None = None) -> TimeLoopSpec:
     """Size the carry buffers for a fused time loop.
 
     For the Pallas backend a field's carry padding is the elementwise max of
@@ -161,6 +263,10 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
     alignment padding on the hi side (so any group can slice its expected
     window geometry out of the carry without reallocating).  The jnp
     backends share the same spec minus alignment.
+
+    With ``shard``, ``grid`` must be the shard's *local* grid and the spec
+    describes the per-shard carry; the distributed executor refreshes the
+    halo slabs by ``ppermute`` inside the loop body.
     """
     grid = tuple(int(g) for g in grid)
     ndim = p.ndim
@@ -216,7 +322,9 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
         raise ValueError(f"unknown carry_write {carry_write!r}")
     return TimeLoopSpec(steps=steps, persistent=persistent,
                         field_pad=field_pad, double_buffer=double_buffer,
-                        group_offsets=group_offsets, carry_write=carry_write)
+                        group_offsets=group_offsets, carry_write=carry_write,
+                        align_hi=tuple(int(a) for a in align_hi),
+                        shard=shard)
 
 
 def _dtype_bytes(dtype: str) -> int:

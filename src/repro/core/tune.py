@@ -136,14 +136,29 @@ class PlanCache:
         os.replace(tmp, self.path)
 
 
+def _mesh_tag(mesh, mesh_axes) -> str:
+    """Stable encoding of the mesh topology a plan was tuned under.
+
+    Two topologies of the same device count (2x4 vs 4x2, or different
+    grid-axis assignments) shard different local blocks and measure
+    different collectives — their tuned plans must not serve each other."""
+    if mesh is None:
+        return "none"
+    axes = tuple(mesh_axes or ())
+    return ",".join(f"{a or '-'}:{1 if a is None else int(mesh.shape[a])}"
+                    for a in axes)
+
+
 def cache_key(p: Program, grid: Sequence[int], backend: str,
               interpret: bool, dtype: str = "float32",
-              mode: str = "loop") -> str:
+              mode: str = "loop", mesh=None, mesh_axes=None) -> str:
     """Tuned plans transfer only between identical search problems: same
-    program semantics, grid, backend, jax version, interpret flag, requested
-    dtype, and tuning mode (``"loop"`` = ranked by the fused ``steps=N``
+    program semantics (boundary conditions included, via the fingerprint),
+    grid, backend, jax version, interpret flag, requested dtype, mesh
+    topology, and tuning mode (``"loop"`` = ranked by the fused ``steps=N``
     measurement with carry-aware VMEM pruning, ``"single"`` = single-step
-    only) — a single-step winner must not silently serve a fused compile."""
+    only) — a single-step winner must not silently serve a fused compile,
+    nor a 2x2 winner a 4x1 mesh."""
     return "|".join([
         program_fingerprint(p),
         "grid=" + "x".join(str(int(g)) for g in grid),
@@ -152,6 +167,7 @@ def cache_key(p: Program, grid: Sequence[int], backend: str,
         f"interpret={int(bool(interpret))}",
         f"dtype={dtype}",
         f"mode={mode}",
+        f"mesh={_mesh_tag(mesh, mesh_axes)}",
     ])
 
 
@@ -291,15 +307,17 @@ def _default_timer_factory(warmup: int, repeats: int) -> Callable:
 
 
 def _measure(p, grid, cand: _Candidate, data, update, cfg: TuneConfig,
-             timer) -> None:
+             timer, mesh=None, mesh_axes=None) -> None:
     from .pipeline import compile_program  # deferred: pipeline imports tune
     fields, scalars, coeffs = data
-    ex = compile_program(p, grid, backend=cand.plan.backend, plan=cand.plan)
+    ex = compile_program(p, grid, backend=cand.plan.backend, plan=cand.plan,
+                         mesh=mesh, mesh_axes=mesh_axes)
     cand.us_single = timer(lambda: ex(fields, scalars, coeffs)) * 1e6
     if update is not None:
         exN = compile_program(p, grid, backend=cand.plan.backend,
                               plan=cand.plan, steps=cfg.steps, update=update,
-                              carry_write=cand.carry_write)
+                              carry_write=cand.carry_write,
+                              mesh=mesh, mesh_axes=mesh_axes)
         cand.us_fused = timer(lambda: exN(fields, scalars, coeffs)) * 1e6
 
 
@@ -310,13 +328,19 @@ def _measure(p, grid, cand: _Candidate, data, update, cfg: TuneConfig,
 def tune_plan(p: Program, grid, *, backend: str = "pallas",
               interpret: bool = True, dtype: str = "float32",
               update=None, config: TuneConfig | None = None,
-              cache: PlanCache | None = None) -> TuneResult:
+              cache: PlanCache | None = None,
+              mesh=None, mesh_axes=None) -> TuneResult:
     """Search the plan space by measurement and persist the winner.
 
     Generates candidates, prunes with the corrected VMEM cost and the
     roofline plan model, measures the survivors (single-step always; fused
     ``steps=N`` when ``update`` is given, which is also what the winner is
     ranked by), and stores the winning record under :func:`cache_key`.
+
+    With ``mesh``/``mesh_axes`` the search tunes a *sharded* plan:
+    candidate blocks are generated and VMEM-priced against the per-shard
+    local grid, every measurement runs the real ``shard_map`` executable
+    (halo exchange included), and the cache key carries the mesh topology.
     """
     # deferred: repro.analysis imports core IR modules, which would re-enter
     # this package's __init__ at import time
@@ -324,37 +348,48 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
     cfg = config or TuneConfig()
     cache = PlanCache() if cache is None else cache
     grid = tuple(int(g) for g in grid)
+    plan_grid = grid
+    if mesh is not None:
+        from .schedule import normalize_mesh_axes, shard_local_grid
+        if mesh_axes is None:
+            mesh_axes = tuple(mesh.axis_names)
+        mesh_axes = normalize_mesh_axes(mesh_axes, p.ndim)
+        plan_grid = shard_local_grid(grid, mesh, mesh_axes)
     timer = cfg.timer or _default_timer_factory(cfg.warmup, cfg.repeats)
     with_loop = update is not None
 
-    cands = _candidates(p, grid, backend, interpret, dtype, cfg, with_loop)
+    cands = _candidates(p, plan_grid, backend, interpret, dtype, cfg,
+                        with_loop)
     baseline, rest = cands[0], cands[1:]
 
-    # prune: VMEM feasibility (carry-aware when tuning the fused loop), then
-    # modeled-time ranking; the baseline never pays for either filter
+    # prune: VMEM feasibility on the local block (carry-aware when tuning
+    # the fused loop), then modeled-time ranking; the baseline never pays
+    # for either filter
     steps_for_cost = cfg.steps if with_loop else None
     feasible = []
     for c in rest:
         if (c.plan.backend == "pallas"
-                and vmem_cost(p, c.plan, grid, steps=steps_for_cost)
+                and vmem_cost(p, c.plan, plan_grid, steps=steps_for_cost)
                 > cfg.vmem_budget):
             continue
         feasible.append(c)
     for c in [baseline] + feasible:
-        c.modeled_s = model_plan(p, c.plan, grid)
+        c.modeled_s = model_plan(p, c.plan, plan_grid)
     feasible.sort(key=lambda c: c.modeled_s)
     survivors = [baseline] + feasible[:max(0, cfg.max_measured - 1)]
 
     data = _synth_data(p, grid, seed=cfg.seed)
     for c in survivors:
-        _measure(p, grid, c, data, update, cfg, timer)
+        _measure(p, grid, c, data, update, cfg, timer,
+                 mesh=mesh, mesh_axes=mesh_axes)
 
     order = sorted(range(len(survivors)),
                    key=lambda i: (survivors[i].score(), i))
     winner = survivors[order[0]]
 
     key = cache_key(p, grid, backend, interpret, dtype,
-                    "loop" if with_loop else "single")
+                    "loop" if with_loop else "single",
+                    mesh=mesh, mesh_axes=mesh_axes)
     record = {
         "plan": plan_to_dict(winner.plan),
         "carry_write": winner.carry_write,
@@ -364,6 +399,7 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
         "baseline_us_single": baseline.us_single,
         "baseline_us_fused": baseline.us_fused,
         "modeled_us": winner.modeled_s * 1e6,
+        "mesh": _mesh_tag(mesh, mesh_axes),
         "steps": cfg.steps if with_loop else None,
         "candidates": len(cands),
         "measured": len(survivors),
@@ -380,7 +416,8 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
 def get_tuned_plan(p: Program, grid, *, backend: str = "pallas",
                    interpret: bool = True, dtype: str = "float32",
                    update=None, config: TuneConfig | None = None,
-                   cache: PlanCache | None = None) -> TuneResult:
+                   cache: PlanCache | None = None,
+                   mesh=None, mesh_axes=None) -> TuneResult:
     """Cache-first entry point behind ``compile_program(strategy="tuned")``.
 
     A hit deserialises the stored plan and performs **zero** timed runs; a
@@ -389,8 +426,14 @@ def get_tuned_plan(p: Program, grid, *, backend: str = "pallas",
     to re-search (and overwrite the entry) with different knobs.
     """
     cache = PlanCache() if cache is None else cache
+    if mesh is not None:
+        from .schedule import normalize_mesh_axes
+        if mesh_axes is None:
+            mesh_axes = tuple(mesh.axis_names)
+        mesh_axes = normalize_mesh_axes(mesh_axes, p.ndim)
     key = cache_key(p, tuple(int(g) for g in grid), backend, interpret,
-                    dtype, "loop" if update is not None else "single")
+                    dtype, "loop" if update is not None else "single",
+                    mesh=mesh, mesh_axes=mesh_axes)
     rec = None if (config is not None and config.force_retune) \
         else cache.lookup(key)
     if rec is not None:
@@ -398,4 +441,5 @@ def get_tuned_plan(p: Program, grid, *, backend: str = "pallas",
                           carry_write=rec.get("carry_write", "repad"),
                           key=key, record=rec, cache_hit=True)
     return tune_plan(p, grid, backend=backend, interpret=interpret,
-                     dtype=dtype, update=update, config=config, cache=cache)
+                     dtype=dtype, update=update, config=config, cache=cache,
+                     mesh=mesh, mesh_axes=mesh_axes)

@@ -102,7 +102,13 @@ def build_group_call(p: Program, group: Sequence[int], block: Sequence[int],
     scalar_index = {s: i for i, s in enumerate(p.scalars)}
     out_names = [op.out for op in ops if op.out in set(gh.group_outputs)]
     coeff_axis = {c: p.coeffs[c] for c in gh.group_coeffs}
-    needs_mask = any(m.any() for m in margins.values())
+    # which ops need the zero-halo mask on margin-extended recompute: a
+    # periodic op's wraparound windows make the recomputed values exact at
+    # every position, so masking them to zero would be wrong; a zero-BC
+    # op's out-of-domain values must read as 0 downstream
+    masked = {op.out: (margins[op.out].any()
+                       and p.fields[op.out].boundary != "periodic")
+              for op in ops}
 
     def kernel(*refs):
         i = 0
@@ -160,7 +166,7 @@ def build_group_call(p: Program, group: Sequence[int], block: Sequence[int],
             ext = tuple(block[ax] + int(m[ax, 0]) + int(m[ax, 1])
                         for ax in range(ndim))
             res = jnp.broadcast_to(jnp.asarray(res, dtype=dtype), ext)
-            if m.any():
+            if masked[op.out]:
                 # zero-halo semantics: recomputed values OUTSIDE the global
                 # domain must read as 0 to downstream consumers.
                 mask = None

@@ -1,0 +1,214 @@
+"""Boundary-condition subsystem: per-field "zero" / "periodic" halos.
+
+Invariants:
+* periodic semantics = numpy wraparound (``np.roll``) on every backend;
+* the full paper kernels agree across backends on a torus, single-step and
+  fused-loop, including deep temp chains and per-level coefficients;
+* the IR rejects incoherent mixes (a periodic field produced from
+  zero-boundary inputs has no recomputable wraparound value);
+* boundaries are part of a program's semantic fingerprint.
+"""
+
+import numpy as np
+import pytest
+
+from repro.apps import (pw_advection, pw_advection_update, tracer_advection,
+                        tracer_advection_update)
+from repro.core import compile_program, program_fingerprint, run_time_loop
+from repro.core.frontend import ProgramBuilder
+
+BACKENDS = ["jnp_naive", "jnp_fused", "pallas"]
+
+
+def lap2d(boundary):
+    b = ProgramBuilder("lap", ndim=2, boundary=boundary)
+    x = b.input("x")
+    o = b.output("o")
+    b.define(o, x[-1, 0] + x[1, 0] + x[0, -1] + x[0, 1] - 4.0 * x[0, 0])
+    return b.build()
+
+
+def pw_data(grid, seed=0):
+    rng = np.random.default_rng(seed)
+    fields = {f: rng.normal(size=grid).astype(np.float32) * 0.1
+              for f in ("u", "v", "w")}
+    scalars = {"tcx": np.float32(0.05), "tcy": np.float32(0.05)}
+    coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+              for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+    return fields, scalars, coeffs
+
+
+def tracer_data(grid, seed=1):
+    rng = np.random.default_rng(seed)
+    fields = {
+        "t": rng.normal(size=grid).astype(np.float32) + 15.0,
+        "un": rng.normal(size=grid).astype(np.float32) * 0.2,
+        "vn": rng.normal(size=grid).astype(np.float32) * 0.2,
+        "wn": rng.normal(size=grid).astype(np.float32) * 0.05,
+        "e3t": np.abs(rng.normal(size=grid)).astype(np.float32) + 1.0,
+        "msk": (rng.uniform(size=grid) > 0.05).astype(np.float32),
+    }
+    scalars = {"rdt": np.float32(0.05), "zeps": np.float32(1e-6)}
+    coeffs = {"ztfreez": np.full(grid[2], -1.8, np.float32)}
+    return fields, scalars, coeffs
+
+
+# ------------------------------------------------ wraparound ground truth
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_periodic_matches_numpy_roll(backend):
+    p = lap2d("periodic")
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(8, 128)).astype(np.float32)
+    want = (np.roll(x, 1, 0) + np.roll(x, -1, 0)
+            + np.roll(x, 1, 1) + np.roll(x, -1, 1) - 4 * x)
+    out = compile_program(p, (8, 128), backend=backend)({"x": x})
+    np.testing.assert_allclose(np.asarray(out["o"]), want,
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_zero_boundary_unchanged_semantics():
+    """The default boundary is still zero extension at the edges."""
+    p = lap2d("zero")
+    x = np.ones((6, 130), np.float32)
+    out = np.asarray(compile_program(p, (6, 130), backend="jnp_naive")(
+        {"x": x})["o"])
+    assert out[3, 64] == 0.0          # interior of constant field
+    assert out[0, 64] == -1.0         # one neighbour missing at the edge
+
+
+# ------------------------------------------------ full kernels on a torus
+
+@pytest.mark.parametrize("backend", ["jnp_fused", "pallas"])
+def test_pw_advection_periodic_backend_parity(backend):
+    grid = (6, 6, 64)
+    p = pw_advection(boundary="periodic")
+    fields, scalars, coeffs = pw_data(grid)
+    ref = compile_program(p, grid, backend="jnp_naive")(fields, scalars,
+                                                        coeffs)
+    out = compile_program(p, grid, backend=backend)(fields, scalars, coeffs)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
+
+
+@pytest.mark.parametrize("strategy", ["fused", "per_field", "auto"])
+def test_tracer_periodic_multi_group_parity(strategy):
+    """Margin recompute of periodic temps stays exact in fused groups
+    (the mask gating: wrapped windows, no zero mask)."""
+    grid = (6, 8, 64)
+    p = tracer_advection(boundary="periodic")
+    fields, scalars, coeffs = tracer_data(grid)
+    ref = compile_program(p, grid, backend="jnp_naive")(fields, scalars,
+                                                        coeffs)
+    out = compile_program(p, grid, backend="pallas",
+                          strategy=strategy)(fields, scalars, coeffs)
+    for k in ref:
+        np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("carry_write", ["repad", "inplace"])
+def test_fused_loop_periodic_matches_host_loop(backend, carry_write):
+    """Periodic halo slabs are refreshed every step of the fused loop."""
+    grid = (6, 6, 64)
+    p = pw_advection(boundary="periodic")
+    fields, scalars, coeffs = pw_data(grid)
+    update = pw_advection_update(0.1)
+    ex = compile_program(p, grid, backend=backend)
+    want = run_time_loop(ex, dict(fields), scalars, coeffs, 3, update)
+    got = compile_program(p, grid, backend=backend, steps=3, update=update,
+                          carry_write=carry_write)(fields, scalars, coeffs)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
+
+
+def test_fused_loop_tracer_periodic():
+    grid = (6, 8, 64)
+    p = tracer_advection(boundary="periodic")
+    fields, scalars, coeffs = tracer_data(grid)
+    update = tracer_advection_update()
+    ex = compile_program(p, grid, backend="jnp_naive")
+    want = run_time_loop(ex, dict(fields), scalars, coeffs, 2, update)
+    got = compile_program(p, grid, backend="pallas", steps=2,
+                          update=update)(fields, scalars, coeffs)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   atol=1e-5, rtol=1e-5, err_msg=k)
+
+
+# ------------------------------------------------ IR-level rules
+
+def test_with_boundary_override():
+    p = pw_advection()
+    assert not p.is_torus()
+    pt = p.with_boundary("periodic")
+    assert pt.is_torus()
+    assert not p.is_torus()                      # original untouched
+    assert set(pt.boundaries().values()) == {"periodic"}
+    # compile_program(boundary=...) is the same override inline
+    grid = (6, 6, 64)
+    fields, scalars, coeffs = pw_data(grid)
+    a = compile_program(pt, grid, backend="jnp_fused")(fields, scalars,
+                                                       coeffs)
+    b = compile_program(p, grid, backend="jnp_fused",
+                        boundary="periodic")(fields, scalars, coeffs)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+def test_unknown_boundary_rejected():
+    with pytest.raises(ValueError, match="boundary"):
+        lap2d("reflect")
+
+
+def test_with_boundary_unknown_field_rejected():
+    """A typo in a per-field mapping must not silently compile the wrong
+    boundary condition."""
+    with pytest.raises(ValueError, match="unknown field"):
+        pw_advection().with_boundary({"uu": "periodic"})
+
+
+def test_periodic_field_from_zero_inputs_rejected():
+    b = ProgramBuilder("bad", ndim=1)
+    x = b.input("x", boundary="zero")
+    t = b.temp("t", boundary="periodic")
+    o = b.output("o", boundary="zero")
+    b.define(t, x[-1] + x[1])
+    b.define(o, t[-1] * t[1])
+    with pytest.raises(ValueError, match="periodic"):
+        b.build()
+
+
+def test_periodic_coeff_requires_torus():
+    b = ProgramBuilder("badc", ndim=1)
+    x = b.input("x", boundary="periodic")
+    o = b.output("o", boundary="periodic")
+    b.input("y", boundary="zero")   # breaks the torus
+    c = b.coeff("c", axis=0)
+    b.define(o, x[1] * c[0])
+    with pytest.raises(ValueError, match="torus"):
+        b.build()
+
+
+def test_mixed_boundaries_allowed_when_coherent():
+    """A zero-boundary output may read periodic inputs: the boundary is a
+    property of the field being *read*."""
+    b = ProgramBuilder("mix", ndim=1)
+    x = b.input("x", boundary="periodic")
+    o = b.output("o", boundary="zero")
+    b.define(o, x[-1] + x[1])
+    p = b.build()
+    v = np.arange(8, dtype=np.float32)
+    want = np.roll(v, 1) + np.roll(v, -1)
+    for backend in BACKENDS:
+        out = compile_program(p, (8,), backend=backend)({"x": v})
+        np.testing.assert_allclose(np.asarray(out["o"]), want, atol=1e-6)
+
+
+def test_fingerprint_encodes_boundary():
+    p = pw_advection()
+    assert program_fingerprint(p) != program_fingerprint(
+        p.with_boundary("periodic"))

@@ -1,4 +1,8 @@
-"""Distributed stencil executor: halo exchange vs single-device oracle.
+"""Distributed single-step executor: halo exchange vs single-device oracle.
+
+Exercised through the unified ``compile_program(..., mesh=, mesh_axes=)``
+entry point (the planner-driven sharded lowering); the deprecated
+``make_sharded_executor`` wrapper is checked once for back-compat.
 
 Runs in a subprocess so the 8-device XLA host-platform override never leaks
 into other tests (which must see 1 device).
@@ -11,6 +15,7 @@ import sys
 import pytest
 
 SCRIPT = r"""
+import warnings
 import numpy as np, jax, jax.numpy as jnp
 from repro.apps import pw_advection, tracer_advection
 from repro.core import compile_program
@@ -29,15 +34,18 @@ def data(p, grid):
               for c, ax in p.coeffs.items()}
     return fields, scalars, coeffs
 
-def check(p, grid, mesh_shape, names, mesh_axes):
+def check(p, grid, mesh_shape, names, mesh_axes, backend="pallas"):
     mesh = make_auto_mesh(mesh_shape, names)
     fields, scalars, coeffs = data(p, grid)
     ref = compile_program(p, grid, backend="jnp_naive")(fields, scalars, coeffs)
-    out = make_sharded_executor(p, grid, mesh, mesh_axes)(fields, scalars, coeffs)
+    ex = compile_program(p, grid, backend=backend, mesh=mesh,
+                         mesh_axes=mesh_axes)
+    out = ex(fields, scalars, coeffs)
     for k in ref:
         np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
                                    atol=1e-4, rtol=1e-4,
-                                   err_msg=f"{p.name}/{k} mesh={mesh_shape}")
+                                   err_msg=f"{p.name}/{k} mesh={mesh_shape} "
+                                           f"backend={backend}")
 
 # 3-axis decomposition of both paper kernels
 check(pw_advection(), (16, 12, 256), (2, 2, 2), ("X","Y","Z"), ("X","Y","Z"))
@@ -45,17 +53,50 @@ check(tracer_advection(), (16, 16, 128), (2, 2, 2), ("X","Y","Z"), ("X","Y","Z")
 # 1-axis and 2-axis layouts (unsharded trailing axes)
 check(pw_advection(), (32, 8, 128), (8,), ("X",), ("X", None, None))
 check(tracer_advection(), (8, 32, 128), (2, 4), ("X","Y"), ("X", "Y", None))
+# jnp backends are sharded citizens too (satellite: backend forwarding)
+check(pw_advection(), (16, 12, 128), (2, 2), ("X","Y"), ("X","Y",None),
+      backend="jnp_fused")
+check(tracer_advection(), (8, 16, 64), (2, 2), ("X","Y"), ("X","Y",None),
+      backend="jnp_naive")
+# periodic torus across shard boundaries
+check(pw_advection(boundary="periodic"), (16, 12, 128), (2, 2, 2),
+      ("X","Y","Z"), ("X","Y","Z"))
+check(tracer_advection(boundary="periodic"), (8, 16, 64), (2, 4),
+      ("X","Y"), ("X","Y",None))
 # diagonal-offset corner correctness
 b = ProgramBuilder("diag", ndim=2)
 x = b.input("x"); o = b.output("o")
 b.define(o, x[-1, -1] + x[1, 1] + x[-2, 2])
 check(b.build(), (16, 32), (2, 4), ("X","Y"), ("X","Y"))
+# same stencil on a torus (wraparound corners)
+bp = ProgramBuilder("diagp", ndim=2, boundary="periodic")
+xp = bp.input("x"); op = bp.output("o")
+bp.define(op, xp[-1, -1] + xp[1, 1] + xp[-2, 2])
+check(bp.build(), (16, 32), (2, 4), ("X","Y"), ("X","Y"))
 # dependency chain across shard boundary (margin recompute in halo)
 b2 = ProgramBuilder("chain", ndim=1)
 x2 = b2.input("x"); t2 = b2.temp("t"); o2 = b2.output("o")
 b2.define(t2, x2[-1] + x2[1])
 b2.define(o2, t2[-1] * t2[1])
 check(b2.build(), (64,), (8,), ("X",), ("X",))
+
+# deprecated wrapper: warns, forwards backend, still correct
+p = pw_advection()
+grid = (16, 12, 128)
+mesh = make_auto_mesh((2, 2), ("X", "Y"))
+fields, scalars, coeffs = data(p, grid)
+ref = compile_program(p, grid, backend="jnp_naive")(fields, scalars, coeffs)
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    legacy = make_sharded_executor(p, grid, mesh, ("X", "Y", None),
+                                   backend="jnp_fused")
+assert any(issubclass(x.category, DeprecationWarning) for x in w)
+assert legacy.plan.backend == "jnp_fused"   # backend forwarded to the plan
+assert legacy.local_grid == (8, 6, 128)
+out = legacy(fields, scalars, coeffs)
+for k in ref:
+    np.testing.assert_allclose(np.asarray(out[k]), np.asarray(ref[k]),
+                               atol=1e-4, rtol=1e-4)
 print("DIST_OK")
 """
 

@@ -258,3 +258,52 @@ def test_corrupt_cache_file_is_ignored(tmp_path):
                          cache=PlanCache(path=str(path)))
     assert not res.cache_hit and calls["n"] > 0
     assert json.load(open(path))["entries"]    # rewritten with the record
+
+
+# --------------------------------------------- mesh topology + boundaries
+
+def test_cache_keyed_by_mesh_topology_and_boundary():
+    """The key separates mesh topologies (2x2x2 vs 4x2 vs local) and
+    boundary conditions — a plan tuned for one must not serve another.
+    Uses lightweight mesh stand-ins: the key only reads ``.shape``."""
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+
+    p = pw_advection()
+    k_local = cache_key(p, GRID, "pallas", True)
+    k_222 = cache_key(p, GRID, "pallas", True,
+                      mesh=FakeMesh({"X": 2, "Y": 2, "Z": 2}),
+                      mesh_axes=("X", "Y", "Z"))
+    k_42 = cache_key(p, GRID, "pallas", True,
+                     mesh=FakeMesh({"X": 4, "Y": 2}),
+                     mesh_axes=("X", "Y", None))
+    k_24 = cache_key(p, GRID, "pallas", True,
+                     mesh=FakeMesh({"X": 2, "Y": 4}),
+                     mesh_axes=("X", "Y", None))
+    k_periodic = cache_key(p.with_boundary("periodic"), GRID, "pallas", True)
+    assert len({k_local, k_222, k_42, k_24, k_periodic}) == 5
+
+
+def test_tuned_plan_boundary_in_fingerprint():
+    """Same program, different boundary => different tuner cache entry."""
+    p = pw_advection()
+    assert program_fingerprint(p) != \
+        program_fingerprint(p.with_boundary("periodic"))
+
+
+# --------------------------------------------------- plan copy-on-write
+
+def test_compile_program_does_not_mutate_shared_plan():
+    """Regression: ``compile_program`` used to retarget ``plan.backend`` in
+    place; a plan served twice from the PlanCache (or held by the caller)
+    would be silently corrupted by a second compile."""
+    p = pw_advection()
+    plan = auto_plan(p, GRID, backend="pallas")
+    groups_before = [list(g) for g in plan.groups]
+    ex = compile_program(p, GRID, backend="jnp_fused", plan=plan)
+    assert plan.backend == "pallas"              # untouched
+    assert ex.plan.backend == "jnp_fused"        # compiled copy retargeted
+    assert plan.groups == groups_before
+    ex.plan.groups[0].append(99)                 # and the copy is deep
+    assert plan.groups == groups_before
