@@ -10,7 +10,6 @@ Stencil-HMLS drew slightly MORE power but 14-92x LESS energy).
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro import hw
 from repro.analysis.stencil_roofline import model_program, modeled_energy_j

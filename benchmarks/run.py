@@ -94,6 +94,7 @@ def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
     fig4_throughput.run_fused_loop(
         emit_row, grid=grid, steps=steps,
         backends=("jnp_naive", "jnp_fused", "pallas"))
+    run_schedule_rows(emit_row, grid=grid, steps=steps)
     if mesh_shape:
         run_sharded_loop(emit_row, grid=grid, steps=steps,
                          mesh_shape=mesh_shape)
@@ -110,6 +111,39 @@ def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
+
+
+def run_schedule_rows(emit_row, grid: tuple, steps: int) -> None:
+    """Stream-vs-block schedule rows: fused-loop steps/sec of the pallas
+    shift-register sweep (each input plane fetched once, windows in the
+    kernel carry) next to the tiled block schedule, so the artifact trail
+    records the dataflow layer's trajectory per commit.  Inputs come from
+    ``fig4_throughput._data`` so these rows are directly comparable to the
+    adjacent ``fig4/.../fused_loop`` rows in the same artifact."""
+    import jax
+    from repro.apps import pw_advection, pw_advection_update
+    from repro.core import compile_program
+
+    p = pw_advection()
+    update = pw_advection_update(0.1)
+    tag = "x".join(str(g) for g in grid)
+    fields, scalars, coeffs = fig4_throughput._data(p, grid)
+    sps = {}
+    for schedule in ("block", "stream"):
+        exN = compile_program(p, grid, backend="pallas", steps=steps,
+                              update=update, schedule=schedule)
+        jax.block_until_ready(exN(fields, scalars, coeffs)["u"])
+        dt = float("inf")
+        for _ in range(3):                      # best-of-3 (CPU noise)
+            t0 = time.perf_counter()
+            out = exN(fields, scalars, coeffs)
+            jax.block_until_ready(out["u"])
+            dt = min(dt, time.perf_counter() - t0)
+        sps[schedule] = steps / dt
+        emit_row(f"sched/pw_advection/{tag}/pallas/{schedule}/fused_loop",
+                 dt * 1e6, f"{steps / dt:.2f} steps/s")
+    emit_row(f"sched/pw_advection/{tag}/pallas/stream_vs_block", 0.0,
+             f"{sps['stream'] / sps['block']:.2f}x stream vs block")
 
 
 def run_sharded_loop(emit_row, grid: tuple, steps: int,

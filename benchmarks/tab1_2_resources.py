@@ -11,7 +11,6 @@ Derived from the actual compiled plans, per problem size.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro import hw
 from repro.apps import pw_advection, tracer_advection

@@ -35,11 +35,9 @@ Collective wire-bytes per op (ring algorithms, group size g):
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Optional
 
-import numpy as np
 
 from .. import hw
 from ..configs.base import ModelConfig, ShapeConfig

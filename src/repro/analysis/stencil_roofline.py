@@ -77,18 +77,96 @@ def model_program(p: Program, dtype_bytes: int = 4) -> StencilModel:
                         mpts_chip=mpts)
 
 
+def plan_bytes_per_point(p: Program, plan, grid, graph=None) -> float:
+    """Modeled HBM bytes per grid point for one plan's actual geometry.
+
+    Schedule-aware (the reuse structure is the whole point of the plan
+    dimension):
+
+    * ``"block"`` — each fuse-group input is fetched as an overlapping
+      window, so its traffic carries the halo overhead
+      ``prod(window) / prod(block)``: a small block on a wide halo re-reads
+      the overlap every tile.
+    * ``"stream"`` — the shift-register sweep fetches **each input cell
+      once per region sweep** (the paper's headline property); the only
+      overhead is the padded halo ring itself, ``prod(padded extents) /
+      prod(grid)``, which vanishes at production grids.
+
+    Outputs are written once either way.  The jnp backends ignore plan
+    geometry and collapse to :func:`model_program`'s backend-level numbers.
+    """
+    bs = hw.DTYPE_BYTES[plan.dtype]
+    if plan.backend != "pallas":
+        return float(model_program(p, dtype_bytes=bs)
+                     .bytes_per_point[plan.backend])
+    grid = [int(g) for g in grid]
+    if getattr(plan, "schedule", "block") == "stream":
+        if graph is None:
+            from ..core.dataflow import lower_to_dataflow
+            graph = lower_to_dataflow(p, plan)
+        bytes_pp = 0.0
+        for region in graph.regions:
+            gh = region.halo
+            padded = [grid[a] + int(gh.input_halo[a, 0])
+                      + int(gh.input_halo[a, 1]) for a in range(p.ndim)]
+            overhead = float(np.prod(padded)) / float(np.prod(grid))
+            bytes_pp += len(gh.group_inputs) * overhead * bs
+            bytes_pp += len(gh.group_outputs) * bs
+        return bytes_pp
+    blk = np.minimum(np.asarray(plan.block[:p.ndim], dtype=np.int64),
+                     np.asarray(grid, dtype=np.int64))
+    blk = np.maximum(blk, 1)
+    bytes_pp = 0.0
+    for grp in plan.groups:
+        gh = infer_halo(p, grp)
+        win = blk + gh.input_halo[:, 0] + gh.input_halo[:, 1]
+        overhead = float(np.prod(win)) / float(np.prod(blk))
+        bytes_pp += len(gh.group_inputs) * overhead * bs
+        bytes_pp += len(gh.group_outputs) * bs
+    return bytes_pp
+
+
+def _plan_flops_per_point(p: Program, plan, grid, graph=None) -> float:
+    """Recompute-inflated flops/point: block margins extend every tile,
+    stream margins only widen the non-stream axes of each plane (stream-axis
+    dependencies ride in ring buffers, recompute-free)."""
+    grid = [int(g) for g in grid]
+    if getattr(plan, "schedule", "block") == "stream":
+        if graph is None:
+            from ..core.dataflow import lower_to_dataflow
+            graph = lower_to_dataflow(p, plan)
+        flops_pp = 0.0
+        plane = np.asarray(grid[1:], dtype=np.int64)
+        for region in graph.regions:
+            for i in region.ops:
+                m = region.halo.margins[i]
+                ext = plane + m[1:, 0] + m[1:, 1]
+                recompute = float(np.prod(ext)) / float(np.prod(plane))
+                flops_pp += count_flops(p.ops[i].expr) * recompute
+        return flops_pp
+    blk = np.minimum(np.asarray(plan.block[:p.ndim], dtype=np.int64),
+                     np.asarray(grid, dtype=np.int64))
+    blk = np.maximum(blk, 1)
+    flops_pp = 0.0
+    for grp in plan.groups:
+        gh = infer_halo(p, grp)
+        for i in grp:
+            m = gh.margins[i]
+            ext = blk + m[:, 0] + m[:, 1]
+            recompute = float(np.prod(ext)) / float(np.prod(blk))
+            flops_pp += count_flops(p.ops[i].expr) * recompute
+    return flops_pp
+
+
 def model_plan(p: Program, plan, grid) -> float:
     """Modeled seconds per time step for one *specific* plan (tuner pruner).
 
     :func:`model_program` prices the three backend roles; this prices a
-    candidate :class:`~repro.core.schedule.DataflowPlan`'s actual geometry so
-    the tuner can rank candidates *before* paying for a measurement:
-
-    * each fuse-group input is fetched as an overlapping window, so its HBM
-      traffic carries the halo overhead ``prod(window) / prod(block)`` — a
-      small block on a wide halo re-reads the overlap every tile;
-    * in-group producer->consumer recompute (overlapped tiling) inflates the
-      flop count by each op's margin-extended evaluation volume.
+    candidate :class:`~repro.core.schedule.DataflowPlan`'s actual geometry
+    so the tuner can rank candidates *before* paying for a measurement —
+    reuse-aware via :func:`plan_bytes_per_point` (stream schedules charge
+    each input cell once per sweep, block schedules re-read window
+    overlaps) and recompute-aware via the margin-extended flop count.
 
     The jnp backends ignore block shape and fuse groups, so their candidates
     collapse to the backend-level bytes/point of :func:`model_program`.
@@ -98,26 +176,15 @@ def model_plan(p: Program, plan, grid) -> float:
     if plan.backend != "pallas":
         m = model_program(p, dtype_bytes=bs)
         return pts / (m.mpts(plan.backend) * 1e6)
-
-    ndim = p.ndim
-    blk = np.minimum(np.asarray(plan.block[:ndim], dtype=np.int64),
-                     np.asarray([int(g) for g in grid], dtype=np.int64))
-    blk = np.maximum(blk, 1)
-    bytes_pp = 0.0
-    flops_pp = 0.0
-    for grp in plan.groups:
-        gh = infer_halo(p, grp)
-        win = blk + gh.input_halo[:, 0] + gh.input_halo[:, 1]
-        overhead = float(np.prod(win)) / float(np.prod(blk))
-        bytes_pp += len(gh.group_inputs) * overhead * bs
-        bytes_pp += len(gh.group_outputs) * bs
-        for i in grp:
-            m = gh.margins[i]
-            ext = blk + m[:, 0] + m[:, 1]
-            recompute = float(np.prod(ext)) / float(np.prod(blk))
-            flops_pp += count_flops(p.ops[i].expr) * recompute
-    t_mem = bytes_pp * pts / hw.TPU_V5E.hbm_bandwidth
-    t_cmp = flops_pp * pts / VPU_F32_FLOPS
+    graph = None
+    if getattr(plan, "schedule", "block") == "stream":
+        # legalise once; both the bytes and flops terms consume it
+        from ..core.dataflow import lower_to_dataflow
+        graph = lower_to_dataflow(p, plan)
+    t_mem = (plan_bytes_per_point(p, plan, grid, graph=graph) * pts
+             / hw.TPU_V5E.hbm_bandwidth)
+    t_cmp = (_plan_flops_per_point(p, plan, grid, graph=graph) * pts
+             / VPU_F32_FLOPS)
     return max(t_mem, t_cmp)
 
 

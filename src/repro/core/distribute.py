@@ -50,7 +50,6 @@ from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # public since jax 0.6; experimental before that
@@ -60,7 +59,7 @@ except AttributeError:  # pragma: no cover
 
 from ..kernels.stencil3d import build_group_call
 from . import boundary as bc
-from .ir import FieldRole, Program
+from .ir import Program
 from .lower_jnp import lower as lower_jnp_step
 from .lower_pallas import _pad_coeffs, _run_groups
 from .schedule import DataflowPlan, ShardSpec, TimeLoopSpec

@@ -15,9 +15,6 @@ the maths appears in the source paper:
 
 from __future__ import annotations
 
-import math
-from typing import Sequence
-
 from .ir import (Access, BinOp, BinOpKind, Cmp, CmpKind, CoeffRef, Const,
                  Expr, FieldDecl, FieldRole, Program, ScalarRef, Select,
                  StencilOp, UnOp, UnOpKind)

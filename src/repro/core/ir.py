@@ -22,10 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-import math
-from typing import Callable, Iterable, Mapping, Sequence
-
-import numpy as np
+from typing import Callable
 
 # --------------------------------------------------------------------------
 # Expressions

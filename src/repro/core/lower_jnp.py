@@ -20,7 +20,6 @@ from __future__ import annotations
 from typing import Mapping
 
 import jax.numpy as jnp
-import numpy as np
 
 from . import boundary as bc
 from .expr_eval import evaluate

@@ -12,7 +12,6 @@ from typing import Mapping
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..kernels.stencil3d import build_group_call
 from . import boundary as bc
@@ -74,6 +73,13 @@ def lower(p: Program, plan: DataflowPlan, grid_shape):
     calls = [build_group_call(p, grp, plan.block, grid_shape, dtype=dtype,
                               interpret=plan.interpret)
              for grp in plan.groups]
+    return lower_from_calls(p, dtype, calls)
+
+
+def lower_from_calls(p: Program, dtype, calls):
+    """Single-step orchestrator over prebuilt kernel calls (shared by the
+    block schedule above and the stream schedule in lower_stream.py — any
+    call exposing the build_group_call geometry attributes works)."""
 
     def run(fields: Mapping[str, jnp.ndarray],
             scalars: Mapping[str, jnp.ndarray] | None = None,
@@ -113,11 +119,18 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
     Coefficients are loop-invariant and padded once, outside the loop.
     """
     dtype = _DTYPES[plan.dtype]
-    ndim = p.ndim
     grid_shape = tuple(int(g) for g in grid_shape)
     calls = [build_group_call(p, grp, plan.block, grid_shape, dtype=dtype,
                               interpret=plan.interpret)
              for grp in plan.groups]
+    return time_loop_from_calls(p, dtype, grid_shape, spec, update, calls)
+
+
+def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
+                         update, calls):
+    """Fused-loop orchestrator over prebuilt kernel calls (shared with the
+    stream schedule, whose carries have no alignment slab)."""
+    ndim = p.ndim
     fpad = spec.field_pad
     bnd = p.boundaries()
     align = spec.align_hi or (0,) * ndim

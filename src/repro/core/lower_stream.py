@@ -1,0 +1,332 @@
+"""Stream backend: StreamGraph regions -> shift-register Pallas kernels.
+
+This is the hardware materialisation of the dataflow layer
+(:mod:`repro.core.dataflow`), the role the paper's HLS dialect plays for the
+FPGA backends.  Per region, one ``pl.pallas_call`` whose **grid iterates
+over the outer (stream) axis**, one step per plane:
+
+* each external input field is DMA'd as exactly **one new plane per step**
+  (BlockSpec of depth 1) — each input element is fetched from HBM once per
+  sweep;
+* the shift-register window buffers live in VMEM **scratch that persists
+  across grid steps** (the kernel's carry): every step rolls each buffer
+  one plane and appends the new plane, so the full stencil window along the
+  stream axis is always resident without refetching (paper Fig. 2);
+* in-region temps consumed at *past* planes keep a small ring buffer of
+  their own recent planes — stream-axis dependencies cost storage, never
+  recompute;
+* the output plane trails the stream front by the region's lead: the output
+  BlockSpec's index map clamps ``step - (lo+hi)`` so warm-up steps write
+  (and later overwrite) plane 0, and every plane's final value is computed
+  from a full window.
+
+Boundary handling mirrors the block schedule: the orchestrator pre-pads the
+stream axis (zero slabs or torus wraparound planes), non-stream margins are
+masked against the global domain for zero-boundary fields, and ring-buffered
+temps store zeros for out-of-domain planes.
+
+The produced callables expose the same geometry attributes as
+``kernels.stencil3d.build_group_call`` (``group_inputs``/``pad_lo``/
+``input_pad`` slicing/…), so the generic orchestrators in
+:mod:`repro.core.lower_pallas` — including the fused ``lax.fori_loop`` time
+loop with carry-resident persistent fields — drive stream and block kernels
+identically.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .dataflow import StreamGraph, StreamRegion, lower_to_dataflow
+from .expr_eval import evaluate
+from .ir import Access, Program
+from .lower_pallas import _DTYPES, lower_from_calls, time_loop_from_calls
+from .schedule import DataflowPlan, TimeLoopSpec
+
+
+def build_stream_call(p: Program, region: StreamRegion, grid_shape,
+                      dtype=jnp.float32, interpret: bool = True,
+                      global_extent=None):
+    """Build a callable(padded_inputs, scalars, coeffs, origin) -> outputs
+    streaming one region over the outer axis (see module docstring).
+
+    ``padded_inputs`` must be padded by ``pad_lo``/``pad_hi`` (exposed on
+    the returned callable); oversized persistent buffers ride in via the
+    ``input_pad`` path exactly as for block kernels.
+    """
+    ndim = p.ndim
+    gh = region.halo
+    grid_shape = tuple(int(g) for g in grid_shape)
+    if global_extent is None:
+        global_extent = grid_shape
+    global_extent = tuple(int(g) for g in global_extent)
+    n0 = grid_shape[0]
+    halo_lo = tuple(int(gh.input_halo[a, 0]) for a in range(ndim))
+    halo_hi = tuple(int(gh.input_halo[a, 1]) for a in range(ndim))
+    lead = halo_hi[0]
+    span = halo_lo[0] + lead          # window depth along the stream - 1
+    n_steps = n0 + span               # padded planes = one grid step each
+    # padded plane extents on the non-stream axes (group-uniform halo)
+    plane_ext = tuple(grid_shape[a] + halo_lo[a] + halo_hi[a]
+                      for a in range(1, ndim))
+
+    ops = [p.ops[i] for i in region.ops]
+    margins = {p.ops[i].out: gh.margins[i] for i in region.ops}
+    produced = {op.out for op in ops}
+    out_names = [op.out for op in ops if op.out in set(gh.group_outputs)]
+    coeff_axis = {c: p.coeffs[c] for c in gh.group_coeffs}
+    depths = {f: int(region.depths[f]) for f in gh.group_inputs}
+    ring_depth = {t: int(r) for t, r in region.rings.items()}
+    ring_names = [op.out for op in ops if op.out in ring_depth]
+    n_scalars = len(p.scalars)
+    scalar_index = {s: i for i, s in enumerate(p.scalars)}
+    # non-stream margin recompute needs the zero-halo mask unless the field
+    # is periodic (wrapped planes are exact); the stream axis itself is
+    # handled by input padding + ring-store masking, never here
+    masked = {op.out: (margins[op.out][1:].any()
+                       and p.fields[op.out].boundary != "periodic")
+              for op in ops}
+
+    def plane_slices(src_lo, m, offset):
+        """Non-stream-axes slice of a resident plane padded by ``src_lo``,
+        evaluated at margin ``m`` with access ``offset``."""
+        sl = []
+        for ax in range(1, ndim):
+            start = int(src_lo[ax] - m[ax, 0] + offset[ax])
+            size = grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
+            sl.append(slice(start, start + size))
+        return tuple(sl)
+
+    def kernel(*refs):
+        i = 0
+        s_ref = refs[i]; i += 1                      # scalars (SMEM, f32)
+        org_ref = refs[i]; i += 1                    # shard origin (SMEM, i32)
+        in_refs = {f: refs[i + k] for k, f in enumerate(gh.group_inputs)}
+        i += len(gh.group_inputs)
+        coeff_refs = {c: refs[i + k] for k, c in enumerate(gh.group_coeffs)}
+        i += len(gh.group_coeffs)
+        out_refs = {f: refs[i + k] for k, f in enumerate(out_names)}
+        i += len(out_names)
+        buf_refs = {f: refs[i + k] for k, f in enumerate(gh.group_inputs)}
+        i += len(gh.group_inputs)
+        ring_refs = {t: refs[i + k] for k, t in enumerate(ring_names)}
+
+        s = pl.program_id(0)
+
+        @pl.when(s == 0)
+        def _init():                    # fresh sweep: clear the carry
+            for r in list(buf_refs.values()) + list(ring_refs.values()):
+                r[...] = jnp.zeros_like(r)
+
+        # shift every window buffer one plane and append the new plane
+        # (the single per-step HBM fetch)
+        windows = {}
+        for f in gh.group_inputs:
+            v = jnp.concatenate([buf_refs[f][...][1:], in_refs[f][...]],
+                                axis=0)
+            buf_refs[f][...] = v
+            windows[f] = v
+        ring_vals = {t: ring_refs[t][...] for t in ring_names}
+        coeff_windows = {c: r[...] for c, r in coeff_refs.items()}
+
+        # the output plane this step completes (negative during warm-up;
+        # the out index map clamps, and ring stores mask by validity)
+        c_plane = s - span
+        results: dict = {}
+        memo: dict = {}
+
+        def scalar(name: str):
+            return s_ref[scalar_index[name]]
+
+        for op in ops:
+            m = margins[op.out]
+            ext = tuple(grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
+                        for ax in range(1, ndim))
+
+            def coeff(cr, m=m):
+                ax = coeff_axis[cr.coeff]
+                cvec = coeff_windows[cr.coeff]
+                if ax == 0:
+                    # per-plane scalar, read at the (clamped) global plane
+                    idx = jnp.clip(s - lead + cr.offset, 0,
+                                   cvec.shape[0] - 1)
+                    v = jax.lax.dynamic_slice(cvec, (idx,), (1,))
+                    return v.reshape((1,) * (ndim - 1))
+                start = int(halo_lo[ax] - m[ax, 0] + cr.offset)
+                size = grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
+                v = cvec[start:start + size]
+                shape = [1] * (ndim - 1)
+                shape[ax - 1] = size
+                return v.reshape(shape)
+
+            def access(a: Access, m=m):
+                o0 = int(a.offset[0])
+                if a.field in produced:
+                    pm = margins[a.field]
+                    if a.field in ring_refs:
+                        # past (or current) plane out of the temp's ring
+                        plane = ring_vals[a.field][
+                            ring_depth[a.field] - 1 + o0]
+                    else:
+                        plane = results[a.field]        # this step's value
+                    return plane[plane_slices(pm[:, 0], m, a.offset)]
+                # external input: resident plane of the shift register
+                plane = windows[a.field][depths[a.field] - 1 - lead + o0]
+                return plane[plane_slices(halo_lo, m, a.offset)]
+
+            mkey = tuple(int(v) for v in m.flatten())
+            op_memo = memo.setdefault(mkey, {})
+            res = evaluate(op.expr, access, scalar, op_memo, coeff=coeff)
+            res = jnp.broadcast_to(jnp.asarray(res, dtype=dtype), ext)
+            if masked[op.out]:
+                mask = None
+                for ax in range(1, ndim):
+                    if not m[ax].any():
+                        continue
+                    g0 = org_ref[ax] - int(m[ax, 0])
+                    coord = g0 + jax.lax.broadcasted_iota(jnp.int32, ext,
+                                                          ax - 1)
+                    ok = (coord >= 0) & (coord < global_extent[ax])
+                    mask = ok if mask is None else (mask & ok)
+                if mask is not None:
+                    res = jnp.where(mask, res, jnp.asarray(0, dtype=dtype))
+            results[op.out] = res
+            if op.out in ring_refs:
+                # ring planes must honour zero-halo semantics along the
+                # stream axis: out-of-domain planes store as zeros (periodic
+                # temps with back-references were legalised into splits)
+                cg = org_ref[0] + c_plane
+                ok = (cg >= 0) & (cg < global_extent[0])
+                stored = jnp.where(ok, res, jnp.zeros_like(res))
+                v = jnp.concatenate([ring_vals[op.out][1:], stored[None]],
+                                    axis=0)
+                ring_refs[op.out][...] = v
+                ring_vals[op.out] = v
+            if op.out in out_refs:
+                center = tuple(slice(int(m[ax, 0]),
+                                     int(m[ax, 0]) + grid_shape[ax])
+                               for ax in range(1, ndim))
+                out_refs[op.out][...] = res[center][None]
+
+    zeros_tail = (0,) * (ndim - 1)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),   # scalars
+                pl.BlockSpec(memory_space=pltpu.SMEM)]   # origin
+    for _ in gh.group_inputs:
+        in_specs.append(pl.BlockSpec((1,) + plane_ext,
+                                     lambda s: (s,) + zeros_tail))
+    for c in gh.group_coeffs:
+        ax = coeff_axis[c]
+        length = n_steps if ax == 0 else plane_ext[ax - 1]
+        in_specs.append(pl.BlockSpec((length,), lambda s: (0,)))
+
+    out_block = (1,) + grid_shape[1:]
+    out_specs = tuple(
+        pl.BlockSpec(out_block,
+                     lambda s: (jnp.maximum(s - span, 0),) + zeros_tail)
+        for _ in out_names)
+    out_shape = tuple(jax.ShapeDtypeStruct(grid_shape, dtype)
+                      for _ in out_names)
+
+    scratch = [pltpu.VMEM((depths[f],) + plane_ext, dtype)
+               for f in gh.group_inputs]
+    for t in ring_names:
+        pm = margins[t]
+        ext_t = tuple(grid_shape[a] + int(pm[a, 0]) + int(pm[a, 1])
+                      for a in range(1, ndim))
+        scratch.append(pltpu.VMEM((ring_depth[t],) + ext_t, dtype))
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(n_steps,),
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_names) > 1 else out_specs[0],
+        out_shape=out_shape if len(out_names) > 1 else out_shape[0],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )
+
+    expect = tuple(halo_lo[a] + grid_shape[a] + halo_hi[a]
+                   for a in range(ndim))
+
+    def run(padded_inputs: dict, scalars_vec=None,
+            padded_coeffs: dict | None = None, origin=None,
+            input_pad: dict | None = None):
+        """Same contract as the block kernels: ``input_pad[f]`` gives the
+        (ndim, 2) padding the provided array actually carries when it
+        exceeds this region's window geometry (fused-loop carries); the
+        expected window is sliced out statically."""
+        svec = (scalars_vec if scalars_vec is not None
+                else jnp.zeros((max(n_scalars, 1),), jnp.float32))
+        org = (origin if origin is not None
+               else jnp.zeros((ndim,), jnp.int32))
+        args = [svec, org]
+        for f in gh.group_inputs:
+            x = padded_inputs[f]
+            if input_pad is not None and f in input_pad:
+                ip = input_pad[f]
+                sl = tuple(slice(int(ip[a][0]) - halo_lo[a],
+                                 int(ip[a][0]) - halo_lo[a] + expect[a])
+                           for a in range(ndim))
+                x = x[sl]
+            args.append(x)
+        for c in gh.group_coeffs:
+            args.append(padded_coeffs[c])
+        res = call(*args)
+        if len(out_names) == 1:
+            res = (res,)
+        return dict(zip(out_names, res))
+
+    # geometry for the shared orchestrators (identical to build_group_call)
+    run.group_inputs = gh.group_inputs
+    run.group_outputs = out_names
+    run.group_coeffs = gh.group_coeffs
+    run.coeff_axis = coeff_axis
+    run.block = (1,) + grid_shape[1:]
+    run.halo_lo = halo_lo
+    run.halo_hi = halo_hi
+    run.align_hi = (0,) * ndim
+    run.pad_lo = halo_lo
+    run.pad_hi = halo_hi
+    run.window = (span + 1,) + plane_ext
+    run.tiles = (n_steps,)
+    run.stream_axis = 0
+    run.depths = depths
+    run.rings = dict(ring_depth)
+    run.vmem_window_bytes = sum(
+        depths[f] * int(np.prod(plane_ext)) for f in gh.group_inputs
+    ) * np.dtype(np.float32 if dtype == jnp.float32 else np.float16).itemsize
+    return run
+
+
+def _build_calls(p: Program, plan: DataflowPlan, grid_shape,
+                 graph: StreamGraph | None):
+    dtype = _DTYPES[plan.dtype]
+    if graph is None:
+        graph = lower_to_dataflow(p, plan, grid_shape)
+    calls = [build_stream_call(p, region, grid_shape, dtype=dtype,
+                               interpret=plan.interpret)
+             for region in graph.regions]
+    return dtype, calls
+
+
+def lower(p: Program, plan: DataflowPlan, grid_shape,
+          graph: StreamGraph | None = None):
+    """Return fn(fields, scalars, coeffs) -> outputs, one streamed sweep."""
+    dtype, calls = _build_calls(p, plan, grid_shape, graph)
+    return lower_from_calls(p, dtype, calls)
+
+
+def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
+                    spec: TimeLoopSpec, update,
+                    graph: StreamGraph | None = None):
+    """Fused ``lax.fori_loop`` time loop over streamed sweeps: the carry
+    holds pre-padded persistent fields (no alignment slab — streams never
+    tile), each step runs every region's shift-register sweep, and the
+    update rule is traced once."""
+    dtype, calls = _build_calls(p, plan, grid_shape, graph)
+    return time_loop_from_calls(p, dtype, grid_shape, spec, update, calls)

@@ -31,7 +31,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .ir import Access, Expr, FieldRole, Program, StencilOp
+from .ir import Expr, FieldRole, Program
 
 
 # --------------------------------------------------------------------------

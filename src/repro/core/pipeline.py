@@ -18,9 +18,8 @@ import dataclasses
 from typing import Mapping
 
 import jax
-import jax.numpy as jnp
 
-from . import distribute, lower_jnp, lower_pallas
+from . import dataflow, distribute, lower_jnp, lower_pallas, lower_stream
 from .ir import Program
 from .passes import infer_halo
 from .schedule import (DataflowPlan, ShardSpec, TimeLoopSpec, auto_plan,
@@ -55,7 +54,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
                     update=None, carry_write: str | None = None,
                     tune_config=None, plan_cache=None,
                     mesh=None, mesh_axes=None,
-                    boundary=None) -> CompiledStencil:
+                    boundary=None, schedule: str | None = None
+                    ) -> CompiledStencil:
     """Compile ``p`` for ``grid`` — local or SPMD, single-step or fused loop.
 
     With ``steps=N`` and an ``update(fields, outputs) -> fields`` rule, the
@@ -77,6 +77,16 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
     ``boundary=`` overrides the program's per-field boundary declarations
     before compiling: a single kind (``"zero"`` / ``"periodic"`` for a
     torus) or a ``{field: kind}`` mapping (see ``Program.with_boundary``).
+
+    ``schedule=`` selects the Pallas iteration schedule: ``"block"``
+    (tiled output, overlapping VMEM windows per tile) or ``"stream"`` (the
+    paper's shift-register dataflow: the kernel grid sweeps the outer axis
+    plane-by-plane with rolling window buffers in the kernel carry, so each
+    input element is fetched from HBM once per sweep — see
+    :mod:`repro.core.dataflow` / :mod:`repro.core.lower_stream`).  ``None``
+    keeps the plan's schedule (``"block"`` for heuristic plans; tuned plans
+    carry whichever schedule measured fastest).  Streaming is
+    pallas-only and not yet available under a mesh.
 
     ``strategy="tuned"`` replaces the ``auto_plan`` heuristic with the
     measured search of :mod:`repro.core.tune`: the persistent plan cache is
@@ -120,7 +130,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         else:
             plan = auto_plan(p, plan_grid, backend=backend,
                              interpret=interpret, dtype=dtype,
-                             strategy=strategy, steps=steps)
+                             strategy=strategy, steps=steps,
+                             schedule=schedule or "block")
     # plans can be shared (PlanCache entries, caller-held objects): the
     # compiled executable always gets its own deep copy, retargeted to the
     # requested backend/mesh, so no compile ever mutates another's plan
@@ -129,13 +140,39 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         overrides["backend"] = backend
     if mesh is not None and plan.mesh_axes_for(ndim) != mesh_axes:
         overrides["mesh_axes"] = mesh_axes
+    if schedule is not None and plan.schedule != schedule:
+        # retargeting the schedule invalidates any cached stream geometry;
+        # a stream plan's block is a degenerate one-plane placeholder, so
+        # converting to "block" re-derives a real tile from the heuristic
+        overrides.update(schedule=schedule, stream=None)
+        if schedule == "block" and plan.schedule == "stream":
+            overrides["block"] = auto_plan(
+                p, plan_grid, backend=backend, interpret=interpret,
+                dtype=plan.dtype, steps=steps).block
     plan = dataclasses.replace(plan, groups=[list(g) for g in plan.groups],
                                **overrides)
     if carry_write is None:
         carry_write = tuned_cw or "repad"
 
-    shard = None
+    graph = None
     group_halos = None
+    if plan.schedule == "stream":
+        if backend != "pallas":
+            raise ValueError(
+                f"schedule='stream' is a pallas dataflow schedule; backend "
+                f"{backend!r} has no streaming lowering")
+        if mesh is not None:
+            raise ValueError(
+                "schedule='stream' is not yet supported under a mesh: the "
+                "shift-register sweep would cross shard boundaries on the "
+                "stream axis; use schedule='block' for SPMD runs")
+        # legalise fusion + size the shift registers once; carry sizing,
+        # the plan's cached StreamSpec and the kernels all share it
+        graph = dataflow.lower_to_dataflow(p, plan, plan_grid)
+        plan = dataclasses.replace(plan, stream=graph.spec())
+        group_halos = [r.halo for r in graph.regions]
+
+    shard = None
     if mesh is not None:
         # halo inference per fuse group is shared by the shard spec and the
         # time-loop carry sizing — compute it once
@@ -154,6 +191,9 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         if mesh is not None:
             raw = distribute.lower_sharded_time_loop(p, plan, grid,
                                                      time_spec, update, mesh)
+        elif plan.schedule == "stream":
+            raw = lower_stream.lower_time_loop(p, plan, grid, time_spec,
+                                               update, graph=graph)
         elif backend == "pallas":
             raw = lower_pallas.lower_time_loop(p, plan, grid, time_spec,
                                                update)
@@ -162,6 +202,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
                                             time_spec, update)
     elif mesh is not None:
         raw = distribute.lower_sharded(p, plan, grid, shard, mesh)
+    elif plan.schedule == "stream":
+        raw = lower_stream.lower(p, plan, grid, graph=graph)
     elif backend == "pallas":
         raw = lower_pallas.lower(p, plan, grid)
     else:

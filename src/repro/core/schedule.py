@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import math
 from typing import Sequence
 
 import numpy as np
@@ -27,6 +26,70 @@ import numpy as np
 from .. import hw
 from .ir import Program
 from .passes import _zeros, infer_halo, stage_split
+
+
+SCHEDULES = ("block", "stream")
+
+
+@dataclasses.dataclass
+class StreamSpec:
+    """Shift-register geometry of a ``schedule="stream"`` plan (the paper's
+    HLS-dialect window buffers, §3.2 Fig. 2).
+
+    Derived from the stencil IR by :func:`repro.core.dataflow.
+    lower_to_dataflow` and carried on the plan so the tuner's JSON cache
+    round-trips the full streaming decision:
+
+    * ``regions`` — the *legalised* fuse groups: plan groups split wherever
+      an in-group temp is read at a positive stream offset (would need the
+      future) or a periodic temp at a negative one (wraparound is not yet
+      resident).
+    * ``depths`` — per region, each input field's rolling window-buffer
+      depth in planes: the field's reach behind the newest plane plus the
+      region's lead plus one (``lo + lead + 1``); every input plane is
+      fetched from HBM exactly once and reused across the full depth.
+    * ``rings`` — per region, ring-buffer depths for temps consumed at past
+      planes (``1 + max back-reference``); streamed dependencies replace
+      the block schedule's overlapped-tiling recompute.
+    * ``leads`` — per region, how many planes ahead of the output plane the
+      stream front runs (the hi-side stream halo).
+    """
+
+    axis: int = 0
+    regions: tuple = ()
+    depths: tuple = ()
+    rings: tuple = ()
+    leads: tuple = ()
+
+    def __post_init__(self):
+        self.regions = tuple(tuple(int(i) for i in r) for r in self.regions)
+        self.depths = tuple({str(f): int(d) for f, d in d.items()}
+                            for d in self.depths)
+        self.rings = tuple({str(f): int(d) for f, d in d.items()}
+                           for d in self.rings)
+        self.leads = tuple(int(v) for v in self.leads)
+
+
+def stream_spec_to_dict(s: StreamSpec | None) -> dict | None:
+    if s is None:
+        return None
+    return {
+        "axis": int(s.axis),
+        "regions": [list(r) for r in s.regions],
+        "depths": [dict(d) for d in s.depths],
+        "rings": [dict(d) for d in s.rings],
+        "leads": list(s.leads),
+    }
+
+
+def stream_spec_from_dict(d: dict | None) -> StreamSpec | None:
+    if d is None:
+        return None
+    return StreamSpec(axis=int(d.get("axis", 0)),
+                      regions=d.get("regions", ()),
+                      depths=d.get("depths", ()),
+                      rings=d.get("rings", ()),
+                      leads=d.get("leads", ()))
 
 
 @dataclasses.dataclass
@@ -48,11 +111,22 @@ class DataflowPlan:
     mesh_axes: tuple | None = None
     # exchange halos every k steps with k-wide halos (comm amortisation)
     halo_every: int = 1
+    # pallas iteration schedule: "block" tiles the output and fetches
+    # overlapping VMEM windows per tile; "stream" iterates the grid over
+    # the outer axis and keeps rolling shift-register window buffers in the
+    # kernel carry (each input plane fetched once, the paper's headline)
+    schedule: str = "block"
+    # shift-register geometry when schedule == "stream" (None = derive at
+    # compile time from the fuse groups)
+    stream: StreamSpec | None = None
 
     def __post_init__(self):
         if self.mesh_axes is not None:
             self.mesh_axes = tuple(self.mesh_axes)
         self.block = tuple(self.block)
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"unknown schedule {self.schedule!r}; valid: "
+                             + ", ".join(repr(s) for s in SCHEDULES))
 
     def mesh_axes_for(self, ndim: int) -> tuple:
         """Mesh axis names normalised to ``ndim`` entries (None = unsharded)."""
@@ -62,16 +136,25 @@ class DataflowPlan:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
         ma = self.mesh_axes_for(len(self.block))
         return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
-                f"mesh_axes={ma})")
+                f"schedule={self.schedule}, mesh_axes={ma})")
 
 
 # --------------------------------------------------------------------------
 # Plan serialisation + program fingerprinting (the tuner's cache layer)
 # --------------------------------------------------------------------------
 
+#: Version of the serialised plan layout.  Bumped whenever a field is added
+#: or its meaning changes (v2: ``schedule`` + ``StreamSpec``).  Deserialising
+#: is tolerant — unknown keys are ignored, missing new keys get their
+#: defaults — so the version mainly lets cache layers treat *stale* records
+#: as misses rather than guessing at their semantics.
+PLAN_SCHEMA_VERSION = 2
+
+
 def plan_to_dict(plan: DataflowPlan) -> dict:
     """JSON-safe encoding of a plan (round-trips via :func:`plan_from_dict`)."""
     return {
+        "schema": PLAN_SCHEMA_VERSION,
         "groups": [[int(i) for i in grp] for grp in plan.groups],
         "block": [int(b) for b in plan.block],
         "dtype": plan.dtype,
@@ -80,10 +163,16 @@ def plan_to_dict(plan: DataflowPlan) -> dict:
         "mesh_axes": (None if plan.mesh_axes is None
                       else list(plan.mesh_axes)),
         "halo_every": int(plan.halo_every),
+        "schedule": plan.schedule,
+        "stream": stream_spec_to_dict(plan.stream),
     }
 
 
 def plan_from_dict(d: dict) -> DataflowPlan:
+    """Tolerant decoding: only the keys this version knows are read (future
+    extras are ignored), and keys a past version never wrote fall back to
+    the field defaults — a pre-``schedule`` record deserialises as a
+    ``"block"`` plan instead of crashing."""
     ma = d.get("mesh_axes")
     return DataflowPlan(
         groups=[list(grp) for grp in d["groups"]],
@@ -93,6 +182,8 @@ def plan_from_dict(d: dict) -> DataflowPlan:
         interpret=bool(d.get("interpret", True)),
         mesh_axes=None if ma is None else tuple(ma),
         halo_every=int(d.get("halo_every", 1)),
+        schedule=d.get("schedule", "block"),
+        stream=stream_spec_from_dict(d.get("stream")),
     )
 
 
@@ -276,8 +367,9 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
     persistent = p.input_fields()
 
     align_hi = np.zeros(ndim, dtype=np.int64)
-    if plan.backend == "pallas":
-        # mirror build_group_call's tile geometry exactly
+    if plan.backend == "pallas" and plan.schedule != "stream":
+        # mirror build_group_call's tile geometry exactly (the stream
+        # schedule never tiles, so its carries carry no alignment slab)
         block = tuple(min(int(b), g) for b, g in zip(plan.block[:ndim], grid))
         tiles = tuple(-(-grid[a] // block[a]) for a in range(ndim))
         align_hi = np.asarray([tiles[a] * block[a] - grid[a]
@@ -285,7 +377,7 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
 
     field_pad = {f: _zeros(ndim) for f in persistent}
     if group_halos is None:
-        group_halos = [infer_halo(p, grp) for grp in plan.groups]
+        group_halos = plan_group_halos(p, plan)
     for gh in group_halos:
         for f in gh.group_inputs:
             if f in field_pad:
@@ -327,12 +419,24 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
                         shard=shard)
 
 
+def plan_group_halos(p: Program, plan: DataflowPlan) -> list:
+    """One :class:`~repro.core.passes.GroupHalo` per executed kernel of
+    ``plan`` — block-schedule fuse groups via :func:`infer_halo`, stream
+    regions (post-legalisation, with shift-register stream-axis halos) via
+    the dataflow layer.  Every carry/shard sizing goes through here so the
+    padding always matches what the lowered kernels will slice."""
+    if plan.schedule == "stream":
+        from .dataflow import lower_to_dataflow
+        return [r.halo for r in lower_to_dataflow(p, plan).regions]
+    return [infer_halo(p, grp) for grp in plan.groups]
+
+
 def _dtype_bytes(dtype: str) -> int:
     return hw.DTYPE_BYTES[dtype]
 
 
 def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int],
-              steps: int | None = None) -> int:
+              steps: int | None = None, graph=None) -> int:
     """Bytes of VMEM one kernel instance of the *largest* group claims.
 
     window bytes x live inputs + margin-extended temps + output tiles,
@@ -348,6 +452,8 @@ def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int],
     """
     bs = _dtype_bytes(plan.dtype)
     grid = tuple(int(g) for g in grid)
+    if plan.schedule == "stream":
+        return _vmem_cost_stream(p, plan, grid, bs, graph=graph)
     group_halos = [infer_halo(p, grp) for grp in plan.groups]
     carry_pad = (plan_time_loop(p, plan, grid, steps,
                                 group_halos=group_halos).field_pad
@@ -370,11 +476,42 @@ def vmem_cost(p: Program, plan: DataflowPlan, grid: Sequence[int],
     return 2 * worst  # double buffering
 
 
+def _vmem_cost_stream(p: Program, plan: DataflowPlan, grid: tuple,
+                      bs: int, graph=None) -> int:
+    """VMEM one stream region claims: the rolling window buffers (depth x
+    padded plane per input), temp ring buffers, one margin-extended result
+    plane per op, and the output planes in flight.  Unlike the block path
+    there is no tile geometry — the non-stream axes are resident whole, so
+    a carry's ``input_pad`` slicing never enlarges the kernel windows."""
+    if graph is None:
+        from .dataflow import lower_to_dataflow
+        graph = lower_to_dataflow(p, plan)
+    ndim = p.ndim
+    worst = 0
+    for region in graph.regions:
+        gh = region.halo
+        plane = [grid[a] + int(gh.input_halo[a, 0]) + int(gh.input_halo[a, 1])
+                 for a in range(1, ndim)]
+        total = 0
+        for f in gh.group_inputs:
+            total += region.depths[f] * int(np.prod(plane)) * bs
+        for i in region.ops:
+            m = gh.margins[i]
+            ext = [grid[a] + int(m[a, 0]) + int(m[a, 1])
+                   for a in range(1, ndim)]
+            planes = 1 + region.rings.get(p.ops[i].out, 0)
+            total += planes * int(np.prod(ext)) * bs
+        total += len(gh.group_outputs) * int(np.prod(grid[1:])) * bs
+        worst = max(worst, total)
+    return 2 * worst  # double-buffered pipeline, as in the block schedule
+
+
 def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
               interpret: bool = True, strategy: str = "auto",
               dtype: str = "float32",
               vmem_budget: int = hw.VMEM_PLAN_BUDGET,
-              steps: int | None = None) -> DataflowPlan:
+              steps: int | None = None,
+              schedule: str = "block") -> DataflowPlan:
     """Pick fuse groups and a lane-aligned block shape that fits VMEM.
 
     Mirrors the paper's auto-optimisation: the planner, not the programmer,
@@ -389,6 +526,10 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
     grid = tuple(int(g) for g in grid)
     ndim = p.ndim
     groups = stage_split(p, strategy)
+    if schedule == "stream":
+        return _auto_plan_stream(p, grid, groups, backend=backend,
+                                 interpret=interpret, dtype=dtype,
+                                 vmem_budget=vmem_budget)
 
     # start from a generous tile and shrink to fit the budget
     blk = []
@@ -426,3 +567,34 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
     return DataflowPlan(groups=groups, block=tuple(blk), dtype=dtype,
                         backend=backend, interpret=interpret,
                         mesh_axes=(None,) * ndim)
+
+
+def _auto_plan_stream(p: Program, grid: tuple, groups: list, *,
+                      backend: str, interpret: bool, dtype: str,
+                      vmem_budget: int) -> DataflowPlan:
+    """Stream-scheduled plan: one rolling-window sweep over the outer axis
+    per (legalised) region, non-stream axes resident whole.  The ``block``
+    field records the degenerate one-plane tile for display/cost purposes.
+    If the full-slab window buffers blow the VMEM budget the only lever is
+    a finer region split (intermediates stream through HBM)."""
+    if backend != "pallas":
+        raise ValueError(
+            f"schedule='stream' is a pallas dataflow schedule; backend "
+            f"{backend!r} has no streaming lowering")
+    from .dataflow import lower_to_dataflow
+    ndim = p.ndim
+    block = (1,) + grid[1:]
+
+    def build(groups):
+        plan = DataflowPlan(groups=groups, block=block, dtype=dtype,
+                            backend=backend, interpret=interpret,
+                            mesh_axes=(None,) * ndim, schedule="stream")
+        graph = lower_to_dataflow(p, plan)
+        plan.stream = graph.spec()
+        return plan, graph
+
+    plan, graph = build(groups)
+    if (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
+            and any(len(g) > 1 for g in groups)):
+        plan, _ = build(stage_split(p, "per_field"))
+    return plan

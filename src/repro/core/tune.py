@@ -58,6 +58,15 @@ __all__ = [
 #: Environment variable overriding the default plan-cache location.
 PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
 
+#: On-disk plan-cache schema version.  Bumped together with
+#: :data:`~repro.core.schedule.PLAN_SCHEMA_VERSION` whenever serialised
+#: plans gain fields whose absence would change behaviour (v2: the
+#: ``schedule`` axis + ``StreamSpec``).  A cache written by another version
+#: is treated as a **miss** — re-tuning is cheap, silently misreading a
+#: stale record is not — and the next store rewrites the file at the
+#: current version.
+CACHE_SCHEMA_VERSION = 2
+
 
 def default_cache_path() -> str:
     env = os.environ.get(PLAN_CACHE_ENV)
@@ -96,9 +105,12 @@ class PlanCache:
 
     ``path=None`` keeps the cache in memory only (tests); the default path
     is ``$REPRO_PLAN_CACHE`` or ``~/.cache/stencil_hmls/plan_cache.json``.
-    File format: ``{"version": 1, "entries": {cache_key: record}}`` where a
-    record holds the serialised plan, its ``carry_write`` style, and the
-    tuning measurements (see :func:`tune_plan`).
+    File format: ``{"version": CACHE_SCHEMA_VERSION, "entries":
+    {cache_key: record}}`` where a record holds the serialised plan, its
+    ``carry_write`` style, and the tuning measurements (see
+    :func:`tune_plan`).  Files written by a different schema version (or
+    unreadable ones) load as empty: every lookup misses, and the first
+    store rewrites the file at the current version.
     """
 
     def __init__(self, path: str | None = "auto"):
@@ -110,11 +122,12 @@ class PlanCache:
             try:
                 with open(self.path) as f:
                     doc = json.load(f)
-                if isinstance(doc.get("entries"), dict):
+                if (doc.get("version") == CACHE_SCHEMA_VERSION
+                        and isinstance(doc.get("entries"), dict)):
                     return doc
             except (json.JSONDecodeError, OSError):
                 pass
-        return {"version": 1, "entries": {}}
+        return {"version": CACHE_SCHEMA_VERSION, "entries": {}}
 
     def lookup(self, key: str) -> dict | None:
         if key in self._mem:
@@ -235,12 +248,19 @@ def _behaviour_key(plan: DataflowPlan, carry_write: str, backend: str,
     if backend != "pallas":
         # the jnp lowerings ignore groups, block shape and dtype
         return (cw,)
+    if plan.schedule == "stream":
+        # streams ignore block shape; the legalised regions decide the
+        # kernels (two strategies whose groups legalise identically tie)
+        regions = (plan.stream.regions if plan.stream is not None
+                   else tuple(tuple(g) for g in plan.groups))
+        return ("stream", regions, plan.dtype, cw)
     return (tuple(tuple(g) for g in plan.groups), tuple(plan.block),
             plan.dtype, cw)
 
 
 def _candidates(p: Program, grid, backend: str, interpret: bool,
-                dtype: str, cfg: TuneConfig, with_loop: bool) -> list:
+                dtype: str, cfg: TuneConfig, with_loop: bool,
+                allow_stream: bool = True) -> list:
     ndim = p.ndim
     out: list[_Candidate] = []
     seen: set = set()
@@ -271,6 +291,17 @@ def _candidates(p: Program, grid, backend: str, interpret: bool,
                                        groups=[list(g) for g in plan0.groups])
             add(plan, cw, f"{strat}/block={'x'.join(map(str, blk))}/cw={cw}"
                           + (f"/dtype={dt}" if dt != "float32" else ""))
+        # the stream schedule is a first-class plan dimension: one
+        # shift-register candidate per fuse strategy (block shape does not
+        # apply — the non-stream axes are resident whole)
+        if allow_stream and backend == "pallas" and ndim >= 2:
+            plan_s = auto_plan(p, grid, backend=backend, interpret=interpret,
+                               dtype=dt, strategy=strat,
+                               vmem_budget=cfg.vmem_budget, steps=steps,
+                               schedule="stream")
+            for cw in carry_writes:
+                add(plan_s, cw, f"stream/{strat}/cw={cw}"
+                               + (f"/dtype={dt}" if dt != "float32" else ""))
     return out
 
 
@@ -358,8 +389,10 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
     timer = cfg.timer or _default_timer_factory(cfg.warmup, cfg.repeats)
     with_loop = update is not None
 
+    # streams are single-device for now: a sharded sweep would cross shard
+    # boundaries on the stream axis, so under a mesh only blocks compete
     cands = _candidates(p, plan_grid, backend, interpret, dtype, cfg,
-                        with_loop)
+                        with_loop, allow_stream=mesh is None)
     baseline, rest = cands[0], cands[1:]
 
     # prune: VMEM feasibility on the local block (carry-aware when tuning

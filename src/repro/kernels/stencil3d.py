@@ -31,7 +31,6 @@ Mosaic (TPU target).
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
@@ -60,7 +59,7 @@ except ImportError:  # pragma: no cover
                                 indexing_mode=pl.Unblocked())
 
 from ..core.expr_eval import evaluate
-from ..core.ir import Access, FieldRole, Program
+from ..core.ir import Access, Program
 from ..core.passes import GroupHalo, infer_halo
 
 

@@ -18,15 +18,12 @@ code lowers through Mosaic.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 try:
     from jax.experimental.pallas import Element  # type: ignore

@@ -1,0 +1,200 @@
+"""Dataflow layer (repro.core.dataflow): the HLS-dialect analogue.
+
+Invariants:
+* window-buffer depths come straight from the stencil access offsets
+  (``lo reach + region lead + 1``), per field;
+* in-region stream-axis dependencies become ring buffers (negative
+  offsets) or region splits (positive offsets / periodic temps), never
+  recompute;
+* legalisation is deterministic and order-preserving, and a plan's cached
+  ``StreamSpec`` reproduces the same regions;
+* 1-D programs have no stream schedule (nothing would stay vectorised).
+"""
+
+import pytest
+
+from repro.apps import pw_advection, tracer_advection
+from repro.core import lower_to_dataflow, plan_from_dict, plan_to_dict
+from repro.core.dataflow import (Compute, Load, Store, Window,
+                                 legalize_stream_groups, stream_halo)
+from repro.core.frontend import ProgramBuilder
+from repro.core.schedule import auto_plan
+
+GRID = (8, 8, 16)
+
+
+def chain_program(boundary="zero"):
+    """in -> a (read back at -2) -> b (read ahead at +1) -> out."""
+    b = ProgramBuilder("chain", ndim=3, boundary=boundary)
+    u, = b.inputs("u")
+    a = b.temp("a")
+    c = b.temp("c")
+    out = b.output("out")
+    b.define(a, u[-2, 0, 0] + u[1, 0, 0])
+    b.define(c, a[-2, 0, 0] + a[0, 0, 0])    # past planes: ring buffer
+    b.define(out, c[1, 0, 0] + c[0, 0, 0])   # future plane: region split
+    return b.build()
+
+
+# ----------------------------------------------------------- buffer sizing
+
+def test_window_depths_from_access_offsets():
+    """pw_advection reads u/v/w at stream offsets in [-1, +1]: every window
+    holds lo(1) + lead(1) + 1 = 3 planes — the paper's 3-plane shift
+    register for a 3-point reach along the outer axis."""
+    p = pw_advection()
+    graph = lower_to_dataflow(p, auto_plan(p, GRID, schedule="stream"))
+    assert len(graph.regions) == 1
+    r = graph.regions[0]
+    assert r.lead == 1
+    assert r.depths == {"u": 3, "v": 3, "w": 3}
+    assert r.rings == {}
+
+
+def test_per_field_depths_differ_with_reach():
+    """A field reaching further back needs a deeper buffer than one that
+    only reads the current plane — depths are per field, not per region."""
+    b = ProgramBuilder("mixed", ndim=2)
+    u, v = b.inputs("u", "v")
+    out = b.output("out")
+    b.define(out, u[-3, 0] + u[1, 0] + v[0, 0])
+    p = b.build()
+    r = lower_to_dataflow(p, auto_plan(p, (16, 16), schedule="stream")
+                          ).regions[0]
+    assert r.lead == 1
+    assert r.depths == {"u": 5, "v": 2}      # lo + lead + 1
+
+
+def test_ring_buffer_depth_and_positive_offset_split():
+    p = chain_program()
+    plan = auto_plan(p, GRID, schedule="stream", strategy="fused")
+    graph = lower_to_dataflow(p, plan)
+    assert [r.ops for r in graph.regions] == [[0, 1], [2]]
+    r0 = graph.regions[0]
+    assert r0.rings == {"a": 3}              # read at -2: 1 + 2 planes
+    # the split temp is materialised: region 0 stores c, region 1 loads it
+    assert "c" in r0.halo.group_outputs
+    assert graph.regions[1].halo.group_inputs == ["c"]
+
+
+def test_periodic_temp_backreference_splits():
+    """A periodic temp read at a negative stream offset cannot ride a ring
+    (its wraparound planes are not resident yet) — the region splits and
+    the temp wraps through HBM padding instead."""
+    b = ProgramBuilder("ptemp", ndim=2, boundary="periodic")
+    u, = b.inputs("u")
+    a = b.temp("a")
+    out = b.output("out")
+    b.define(a, u[-1, 0] + u[1, 0])
+    b.define(out, a[-1, 0] + a[0, 0])
+    p = b.build()
+    assert legalize_stream_groups(p, [[0, 1]]) == [[0], [1]]
+    # the same dependency on a zero-boundary program stays fused (ring)
+    pz = p.with_boundary("zero")
+    assert legalize_stream_groups(pz, [[0, 1]]) == [[0, 1]]
+
+
+# ------------------------------------------------------ stream-aware halos
+
+def test_stream_halo_has_no_stream_margins():
+    """Block-schedule margins extend producers along every axis; stream
+    margins only widen the non-stream axes (rings replace recompute)."""
+    b = ProgramBuilder("m", ndim=3)
+    u, = b.inputs("u")
+    a = b.temp("a")
+    out = b.output("out")
+    b.define(a, u[1, 1, 0] + u[-1, -1, 0])
+    b.define(out, a[-1, 1, 0] + a[0, -1, 0])
+    p = b.build()
+    gh = stream_halo(p, [0, 1])
+    m_a = gh.margins[0]
+    assert m_a[0].tolist() == [0, 0]         # stream axis: ring, no margin
+    assert m_a[1].tolist() == [1, 1]         # y: consumer offsets propagate
+    # input halo along the stream axis is the raw reach, not margin-extended
+    assert gh.input_halo[0].tolist() == [1, 1]
+    assert gh.input_halo[1].tolist() == [2, 2]
+
+
+# ----------------------------------------------------- graph structure
+
+def test_graph_nodes_and_text():
+    p = pw_advection()
+    graph = lower_to_dataflow(p, auto_plan(p, GRID, schedule="stream"))
+    nodes = graph.regions[0].nodes
+    kinds = [type(n) for n in nodes]
+    assert kinds.count(Load) == 3 and kinds.count(Window) == 3
+    assert kinds.count(Compute) == 3 and kinds.count(Store) == 3
+    txt = graph.to_text()
+    assert "dataflow.window(%u) depth=3 reach=(-1,+1)" in txt
+    assert "dataflow.store %su" in txt
+
+
+def test_tracer_advection_legalises_into_streamable_regions():
+    """The 24-op MUSCL chain splits exactly where divergences read fluxes
+    at +1 along the stream axis; slope limiting (-1 back-references) stays
+    fused via ring buffers."""
+    p = tracer_advection()
+    graph = lower_to_dataflow(p, auto_plan(p, (6, 8, 16), schedule="stream"))
+    assert len(graph.regions) > 1            # positive offsets force splits
+    for r in graph.regions:
+        gh = stream_halo(p, r.ops)           # legal: no exception
+        for i in r.ops:
+            assert not gh.margins[i][0].any()
+    assert sum(len(r.ops) for r in graph.regions) == len(p.ops)
+    assert any(r.rings for r in graph.regions)
+
+
+def test_cached_stream_spec_reproduces_regions():
+    """A plan deserialised from the tuner cache (StreamSpec present) lowers
+    to the same regions as the fresh legalisation."""
+    p = tracer_advection()
+    plan = auto_plan(p, (6, 8, 16), schedule="stream")
+    fresh = lower_to_dataflow(p, plan)
+    cached = plan_from_dict(plan_to_dict(plan))
+    again = lower_to_dataflow(p, cached)
+    assert [r.ops for r in again.regions] == [r.ops for r in fresh.regions]
+    assert [r.depths for r in again.regions] == \
+        [r.depths for r in fresh.regions]
+
+
+def test_stream_rejects_1d_programs():
+    b = ProgramBuilder("one", ndim=1)
+    u, = b.inputs("u")
+    out = b.output("out")
+    b.define(out, u[-1] + u[1])
+    p = b.build()
+    with pytest.raises(ValueError, match="ndim >= 2"):
+        auto_plan(p, (64,), schedule="stream")
+
+
+def test_cached_spec_relegalised_when_boundary_changes():
+    """Regression: a StreamSpec legalised under zero boundaries kept a
+    periodic temp's negative stream offset fused (ring buffer) when the
+    plan was reused on the ``boundary="periodic"`` variant — the ring's
+    out-of-domain masking then silently corrupted the wraparound values.
+    Cached regions must be re-validated against the program being lowered."""
+    import numpy as np
+
+    from repro.core import compile_program
+
+    b = ProgramBuilder("regress", ndim=2)
+    u, = b.inputs("u")
+    a = b.temp("a")
+    out = b.output("out")
+    b.define(a, u[-1, 0] + u[1, 0])
+    b.define(out, a[-1, 0] + a[0, 0])
+    p = b.build()
+    grid = (8, 16)
+    plan = auto_plan(p, grid, schedule="stream", strategy="fused")
+    assert [list(r) for r in plan.stream.regions] == [[0, 1]]  # ring-fused
+
+    pp = p.with_boundary("periodic")
+    graph = lower_to_dataflow(pp, plan)          # cached spec re-checked
+    assert [r.ops for r in graph.regions] == [[0], [1]]
+
+    rng = np.random.default_rng(3)
+    fields = {"u": rng.normal(size=grid).astype(np.float32)}
+    ref = compile_program(pp, grid, backend="jnp_fused")(fields, {}, {})
+    got = compile_program(pp, grid, plan=plan)(fields, {}, {})
+    np.testing.assert_allclose(np.asarray(got["out"]),
+                               np.asarray(ref["out"]), atol=1e-6, rtol=1e-6)

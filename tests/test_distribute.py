@@ -111,3 +111,58 @@ def test_distributed_halo_exchange():
                        capture_output=True, text=True, timeout=600)
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
     assert "DIST_OK" in r.stdout
+
+
+DEPRECATION_SCRIPT = r"""
+import warnings
+import numpy as np, jax
+from repro.apps import pw_advection
+from repro.core import compile_program
+from repro.core.distribute import make_sharded_executor
+from repro.dist.sharding import make_auto_mesh
+
+assert jax.device_count() == 2
+rng = np.random.default_rng(11)
+p = pw_advection()
+grid = (8, 8, 128)
+fields = {f: rng.normal(size=grid).astype(np.float32) * 0.1
+          for f in ("u", "v", "w")}
+scalars = {"tcx": np.float32(0.05), "tcy": np.float32(0.05)}
+coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+          for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+
+for shape, axes in (((1, 1), ("X", "Y", None)), ((1, 2), ("X", "Y", None))):
+    mesh = make_auto_mesh(shape, ("X", "Y"))
+    ref = compile_program(p, grid, backend="jnp_fused", mesh=mesh,
+                          mesh_axes=axes)(fields, scalars, coeffs)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = make_sharded_executor(p, grid, mesh, axes,
+                                       backend="jnp_fused")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w), shape
+    # legacy attribute surface still present
+    assert legacy.local_grid == legacy.shard.local_grid
+    assert legacy.mesh_axes == legacy.shard.mesh_axes
+    out = legacy(fields, scalars, coeffs)
+    for k in ref:
+        # the wrapper forwards to compile_program with identical arguments,
+        # so the compiled graphs are the same: results must BIT-match
+        a, b = np.asarray(out[k]), np.asarray(ref[k])
+        assert a.tobytes() == b.tobytes(), (shape, k,
+                                            np.abs(a - b).max())
+print("DEPRECATION_OK")
+"""
+
+
+@pytest.mark.slow
+def test_make_sharded_executor_deprecation_bitmatch():
+    """The deprecated wrapper warns and its results bit-match
+    ``compile_program`` on a degenerate 1x1 and a real 1x2 mesh."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", DEPRECATION_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "DEPRECATION_OK" in r.stdout

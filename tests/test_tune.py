@@ -21,7 +21,7 @@ from repro.core import (PlanCache, TuneConfig, compile_program,
                         program_fingerprint, tune_plan)
 from repro.core.frontend import ProgramBuilder
 from repro.core.schedule import auto_plan
-from repro.core.tune import cache_key
+from repro.core.tune import CACHE_SCHEMA_VERSION, cache_key
 
 GRID = (8, 8, 16)
 
@@ -108,7 +108,7 @@ def test_cache_file_format_roundtrip(tmp_path):
                     config=TuneConfig(steps=2, timer=timer),
                     cache=PlanCache(path=path))
     doc = json.load(open(path))
-    assert doc["version"] == 1
+    assert doc["version"] == CACHE_SCHEMA_VERSION
     rec = doc["entries"][res.key]
     assert plan_to_dict(plan_from_dict(rec["plan"])) == rec["plan"]
     assert rec["fingerprint"] == program_fingerprint(small_program())
@@ -307,3 +307,87 @@ def test_compile_program_does_not_mutate_shared_plan():
     assert plan.groups == groups_before
     ex.plan.groups[0].append(99)                 # and the copy is deep
     assert plan.groups == groups_before
+
+
+# --------------------------------------------- cache schema evolution (v2)
+
+def test_stale_cache_version_is_a_miss_and_rewritten(tmp_path):
+    """A cache file written by another schema version never serves entries:
+    the lookup misses (forcing a re-tune) and the next store rewrites the
+    file at the current version — old records can't poison new fields."""
+    path = str(tmp_path / "plans.json")
+    timer, calls = make_fake_timer()
+    cfg = TuneConfig(steps=2, timer=timer)
+    res = tune_plan(small_program(), GRID, backend="jnp_fused",
+                    update=small_update, config=cfg, cache=PlanCache(path=path))
+    doc = json.load(open(path))
+    assert doc["version"] == CACHE_SCHEMA_VERSION
+
+    # forge a pre-schedule-era cache: same entries, version 1
+    stale = {"version": 1, "entries": doc["entries"]}
+    json.dump(stale, open(path, "w"))
+    fresh = PlanCache(path=path)            # no in-memory copy
+    assert fresh.lookup(res.key) is None    # stale version = miss
+
+    calls["n"] = 0
+    res2 = get_tuned_plan(small_program(), GRID, backend="jnp_fused",
+                          update=small_update, config=cfg, cache=fresh)
+    assert not res2.cache_hit and calls["n"] > 0    # re-tuned
+    doc2 = json.load(open(path))
+    assert doc2["version"] == CACHE_SCHEMA_VERSION  # rewritten current
+    assert fresh.lookup(res2.key) is not None
+
+
+def test_plan_from_dict_tolerates_schema_drift():
+    """Unknown keys are ignored, keys a past version never wrote default."""
+    plan = auto_plan(small_program(), GRID, backend="pallas")
+    d = plan_to_dict(plan)
+
+    # a future version's extra keys must not crash this one
+    future = dict(d, schema=99, exotic_knob={"nested": [1, 2]})
+    assert plan_to_dict(plan_from_dict(future)) == d
+
+    # a pre-v2 record (no schema/schedule/stream) defaults to a block plan
+    legacy = {k: v for k, v in d.items()
+              if k not in ("schema", "schedule", "stream")}
+    r = plan_from_dict(legacy)
+    assert r.schedule == "block" and r.stream is None
+    assert r.groups == plan.groups and r.block == plan.block
+
+    # minimal ancient record: only the two originally-required keys
+    r0 = plan_from_dict({"groups": [[0]], "block": [8, 8, 16]})
+    assert r0.dtype == "float32" and r0.halo_every == 1
+
+
+def test_plan_cache_roundtrips_stream_spec(tmp_path):
+    """A stream-scheduled winner survives the JSON cache bit-for-bit:
+    schedule, legalised regions, window depths, rings, leads."""
+    p = pw_advection()
+    plan = auto_plan(p, GRID, schedule="stream")
+    assert plan.stream is not None and plan.stream.depths
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    cache.store("k", {"plan": plan_to_dict(plan), "carry_write": "repad"})
+    rec = PlanCache(path=path).lookup("k")
+    got = plan_from_dict(rec["plan"])
+    assert got.schedule == "stream"
+    assert got.stream == plan.stream
+    assert plan_to_dict(got) == plan_to_dict(plan)
+
+
+def test_tuner_enumerates_stream_and_block_schedules():
+    """``strategy="tuned"`` searches both schedule values: the candidate
+    set contains shift-register stream plans next to block plans, and the
+    winner's schedule round-trips through the record."""
+    from repro.core.tune import _candidates
+    cfg = TuneConfig(steps=2, timer=lambda fn: 1.0)
+    cands = _candidates(pw_advection(), GRID, "pallas", True, "float32",
+                        cfg, with_loop=True)
+    schedules = {c.plan.schedule for c in cands}
+    assert schedules == {"block", "stream"}
+    stream_cands = [c for c in cands if c.plan.schedule == "stream"]
+    assert all(c.plan.stream is not None for c in stream_cands)
+    # ...and the jnp backends never see stream candidates
+    jcands = _candidates(pw_advection(), GRID, "jnp_fused", True, "float32",
+                         cfg, with_loop=True)
+    assert {c.plan.schedule for c in jcands} == {"block"}
