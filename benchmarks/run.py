@@ -235,6 +235,97 @@ def run_tune(out_path: str, cache_path: str) -> None:
           flush=True)
 
 
+def run_serve(out_path: str, baseline_path: str | None = None) -> None:
+    """Serving-layer smoke: mixed-shape request traffic through the async
+    StencilEngine -> throughput + latency-quantile rows, plus a regression
+    gate against the committed baseline (fail when throughput drops more
+    than the baseline's tolerance, default 30%)."""
+    import numpy as np
+    from repro.apps import pw_advection, pw_advection_update
+    from repro.serve import StencilEngine, StencilRequest
+
+    steps, rounds = 3, 6
+    p = pw_advection()
+    update = pw_advection_update(0.1)
+    grids = [(16, 16, 16), (12, 14, 16), (16, 16, 24), (10, 16, 16)]
+    rng = np.random.default_rng(0)
+
+    def make_req(grid):
+        fields = {f: rng.normal(size=grid).astype(np.float32) * 0.1
+                  for f in ("u", "v", "w")}
+        scalars = {"tcx": 0.05, "tcy": 0.05}
+        coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+                  for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+        return StencilRequest(program=p, fields=fields, scalars=scalars,
+                              coeffs=coeffs, steps=steps, update=update,
+                              update_key="pw/dt=0.1")
+
+    rows = []
+
+    def emit_row(name: str, us: float, derived: str = ""):
+        emit(name, us, derived)
+        rows.append({"name": name, "us": round(us, 2), "derived": derived})
+
+    with StencilEngine(backend="jnp_fused", max_batch=4,
+                       window_s=0.005) as eng:
+        # warm phase: compile every bucket once
+        eng.map([make_req(g) for g in grids], timeout=600)
+        warm_traces = eng.stats.traces
+        eng.stats.reset_latencies()   # quantiles = steady state, not compiles
+        t0 = time.perf_counter()
+        futs = [eng.submit(make_req(g))
+                for _ in range(rounds) for g in grids]
+        for f in futs:
+            f.result(600)
+        wall = time.perf_counter() - t0
+        s = eng.stats
+        tput = len(futs) / wall
+        tag = f"pw_advection/jnp_fused/steps{steps}"
+        emit_row(f"serve/{tag}/throughput", 0.0,
+                 f"{tput:.2f} req/s ({len(futs)} reqs in {wall:.2f}s)")
+        emit_row(f"serve/{tag}/p50", s.p50_ms() * 1e3,
+                 f"{s.p50_ms():.1f} ms")
+        emit_row(f"serve/{tag}/p99", s.p99_ms() * 1e3,
+                 f"{s.p99_ms():.1f} ms")
+        emit_row(f"serve/{tag}/cache", 0.0,
+                 f"hit_rate={s.cache_hit_rate():.2f} "
+                 f"occupancy={s.occupancy():.2f} "
+                 f"warm_traces={s.traces - warm_traces} "
+                 f"compiles={s.compiles}")
+        summary = {"throughput_rps": tput, "p50_ms": s.p50_ms(),
+                   "p99_ms": s.p99_ms(), "hit_rate": s.cache_hit_rate(),
+                   "occupancy": s.occupancy(),
+                   "warm_traces": s.traces - warm_traces}
+    doc = {
+        "kind": "bench_serve_smoke",
+        "grids": [list(g) for g in grids],
+        "steps": steps,
+        "requests": rounds * len(grids),
+        "time": time.time(),
+        "platform": platform.platform(),
+        "commit": os.environ.get("GITHUB_SHA", ""),
+        "summary": summary,
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
+    if summary["warm_traces"]:
+        raise SystemExit(f"serve smoke: {summary['warm_traces']} re-traces "
+                         "on warm requests (expected 0)")
+    if baseline_path and os.path.exists(baseline_path):
+        base = json.load(open(baseline_path))
+        tol = float(base.get("tolerance", 0.30))
+        floor = float(base["throughput_rps"]) * (1.0 - tol)
+        if tput < floor:
+            raise SystemExit(
+                f"serve throughput regression: {tput:.2f} req/s < "
+                f"{floor:.2f} req/s floor (baseline "
+                f"{base['throughput_rps']:.2f} req/s - {tol:.0%})")
+        print(f"serve baseline check OK: {tput:.2f} req/s >= "
+              f"{floor:.2f} req/s floor", flush=True)
+
+
 def lm_roofline_summary(emit):
     files = sorted(glob.glob("experiments/dryrun/*.json"))
     for f in files:
@@ -262,9 +353,18 @@ def main() -> None:
     ap.add_argument("--tune", action="store_true",
                     help="CI-sized measured plan search: tuned-vs-auto_plan "
                          "rows per backend + persistent plan cache")
+    ap.add_argument("--serve", action="store_true",
+                    help="serving-layer smoke: mixed-shape traffic through "
+                         "the async StencilEngine, throughput + p50/p99 "
+                         "rows, baseline regression gate")
+    ap.add_argument("--serve-baseline",
+                    default="benchmarks/serve_baseline.json",
+                    help="baseline JSON for the --serve regression gate "
+                         "(missing file skips the gate)")
     ap.add_argument("--out", default=None,
-                    help="artifact path for --smoke / --tune "
-                         "(default BENCH_smoke.json / BENCH_tune_smoke.json)")
+                    help="artifact path for --smoke / --tune / --serve "
+                         "(default BENCH_smoke.json / BENCH_tune_smoke.json "
+                         "/ BENCH_serve_smoke.json)")
     ap.add_argument("--plan-cache", default="PLAN_CACHE_smoke.json",
                     help="plan-cache path for --tune")
     ap.add_argument("--mesh", default=None,
@@ -280,13 +380,17 @@ def main() -> None:
     if want != mesh_shape:
         ap.error(f"--mesh mismatch: argparse saw {want}, the import-time "
                  f"scanner saw {mesh_shape}")
-    if mesh_shape and (args.tune or not args.smoke):
+    if mesh_shape and (args.tune or args.serve or not args.smoke):
         ap.error("--mesh only applies to --smoke (the XLA device-count "
-                 "override would silently skew --tune / full-sweep timings)")
+                 "override would silently skew --tune / --serve / "
+                 "full-sweep timings)")
 
     emit("bench/header", 0.0, "name,us_per_call,derived")
     if args.tune:
         run_tune(args.out or "BENCH_tune_smoke.json", args.plan_cache)
+        return
+    if args.serve:
+        run_serve(args.out or "BENCH_serve_smoke.json", args.serve_baseline)
         return
     if args.smoke:
         run_smoke(args.out or "BENCH_smoke.json", mesh_shape=mesh_shape)

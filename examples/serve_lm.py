@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_smoke
 from repro.models import init_lm
-from repro.serve import ServeEngine
+from repro.models import ServeEngine
 
 
 def main():

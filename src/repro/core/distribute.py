@@ -62,7 +62,7 @@ from . import boundary as bc
 from .ir import Program
 from .lower_jnp import lower as lower_jnp_step
 from .lower_pallas import _pad_coeffs, _run_groups
-from .schedule import DataflowPlan, ShardSpec, TimeLoopSpec
+from .schedule import DataflowPlan, ShardSpec, TimeLoopSpec, adapt_update
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
 
@@ -388,6 +388,7 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
     shard = spec.shard
     if shard is None:
         raise ValueError("spec has no ShardSpec; use the local lowerings")
+    update = adapt_update(update)
     global_grid = tuple(int(g) for g in global_grid)
     ndim = p.ndim
     jdtype = _DTYPES[plan.dtype]
@@ -500,7 +501,11 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
             outputs = step(fresh, scal)
             cur = {f: fresh[f][interior[f]] for f in spec.persistent}
             new = dict(cur)
-            new.update(update(cur, outputs))
+            # the packed pallas scalar vector unpacks back to the name->value
+            # dict the update rule sees everywhere else
+            sdict = ({s: scal[i] for i, s in enumerate(p.scalars)}
+                     if backend == "pallas" else scal)
+            new.update(update(cur, outputs, sdict))
             out = {}
             for f in spec.persistent:
                 if spec.carry_write == "inplace":

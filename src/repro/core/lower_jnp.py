@@ -116,6 +116,9 @@ def lower_time_loop(p: Program, mode: str, spec, update):
     """
     import jax
 
+    from .schedule import adapt_update
+
+    update = adapt_update(update)
     fpad = spec.field_pad
     bnd = p.boundaries()
     step_fn = lower(p, mode, prepad=fpad)
@@ -141,7 +144,7 @@ def lower_time_loop(p: Program, mode: str, spec, update):
             outs = step_fn(carry, scalars, coeffs)
             cur = {f: carry[f][interior[f]] for f in spec.persistent}
             new = dict(cur)
-            new.update(update(cur, outs))
+            new.update(update(cur, outs, scalars))
             out = {}
             for f in spec.persistent:
                 if spec.carry_write == "inplace" and bnd[f] == "zero":

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from ..kernels.stencil3d import build_group_call
 from . import boundary as bc
 from .ir import Program
-from .schedule import DataflowPlan, TimeLoopSpec
+from .schedule import DataflowPlan, TimeLoopSpec, adapt_update
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
 
@@ -130,6 +130,7 @@ def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
                          update, calls):
     """Fused-loop orchestrator over prebuilt kernel calls (shared with the
     stream schedule, whose carries have no alignment slab)."""
+    update = adapt_update(update)
     ndim = p.ndim
     fpad = spec.field_pad
     bnd = p.boundaries()
@@ -169,7 +170,7 @@ def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
             outputs = _run_groups(p, calls, svec, pc_per_call, resolve)
             cur = {f: carry[f][interior[f]] for f in spec.persistent}
             new = dict(cur)
-            new.update(update(cur, outputs))
+            new.update(update(cur, outputs, scalars))
             out = {}
             for f in spec.persistent:
                 if spec.carry_write == "inplace" and bnd[f] == "zero":

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import inspect
 from typing import Sequence
 
 import numpy as np
@@ -198,6 +199,135 @@ def program_fingerprint(p: Program) -> str:
     parts += [f"coeff:{c}:{ax}" for c, ax in sorted(p.coeffs.items())]
     parts.append(f"scalars:{','.join(p.scalars)}")
     return hashlib.sha256("\n".join(parts).encode()).hexdigest()[:16]
+
+
+# --------------------------------------------------------------------------
+# Grid bucketing (the serving layer's shape quantisation)
+# --------------------------------------------------------------------------
+
+def program_reach(p: Program) -> np.ndarray:
+    """Transitive stencil reach of ``p`` as an ``(ndim, 2)`` array: how far
+    any output cell's value depends on input cells, through every
+    producer->consumer chain.  This is the halo a serving bucket must keep
+    between a request's true grid and the bucket edge so that no in-domain
+    read ever observes the bucket boundary."""
+    return np.array(infer_halo(p, range(len(p.ops))).input_halo)
+
+
+def quantize_extent(n: int, *, lane_axis: bool = False,
+                    lane: int = hw.LANE) -> int:
+    """Round one grid extent up to its bucket quantum.
+
+    Small extents round to the next power of two (few buckets, bounded
+    padding waste); extents at or beyond the lane width round to lane
+    multiples on the lane axis (the 512-bit-burst analogue) and to
+    32-multiples elsewhere — so arbitrarily varied request grids land on a
+    small, hardware-aligned set of compiled shapes.
+    """
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"extent must be >= 1, got {n}")
+    quantum = lane if lane_axis else 32
+    if n >= quantum:
+        return hw.align_up(n, quantum)
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """Placement of one request grid inside a quantised serving bucket.
+
+    The request's true ``grid`` sits at ``offset`` (the program's lo-side
+    reach) inside ``bucket``; the slab below the offset and everything past
+    ``offset + grid`` is boundary extension the serving layer fills (zeros
+    or wraparound) and re-normalises every fused step, so in-domain reads
+    never observe the bucket edge.
+    """
+
+    grid: tuple
+    bucket: tuple
+    offset: tuple
+
+    def interior(self) -> tuple:
+        """Slices selecting the true grid out of a bucket-shaped array."""
+        return tuple(slice(o, o + g) for o, g in zip(self.offset, self.grid))
+
+
+def bucket_for(p: Program, grid: Sequence[int], *,
+               lane: int = hw.LANE) -> BucketSpec:
+    """Quantised serving bucket for ``grid``: true extent plus the program's
+    lo/hi reach, rounded up per :func:`quantize_extent`.  Requests whose
+    grids share a bucket share one compiled executor."""
+    grid = tuple(int(g) for g in grid)
+    if len(grid) != p.ndim:
+        raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
+    reach = program_reach(p)
+    bucket, offset = [], []
+    for a, g in enumerate(grid):
+        lo, hi = int(reach[a, 0]), int(reach[a, 1])
+        bucket.append(quantize_extent(g + lo + hi,
+                                      lane_axis=(a == p.ndim - 1), lane=lane))
+        offset.append(lo)
+    return BucketSpec(grid=grid, bucket=tuple(bucket), offset=tuple(offset))
+
+
+def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
+                       backend: str, dtype: str = "float32",
+                       interpret: bool = True, schedule: str | None = None,
+                       steps: int | None = None) -> str:
+    """Cache key of one serving-bucket executor: program semantics
+    (boundaries included, via :func:`program_fingerprint`), bucket shape,
+    backend/compile options, fused depth, and the plan schema version — a
+    record written by another plan layout must read as a miss, never as a
+    silently misdecoded plan."""
+    return "|".join([
+        "serve",
+        program_fingerprint(p),
+        "bucket=" + "x".join(str(int(b)) for b in bucket),
+        f"backend={backend}",
+        f"dtype={dtype}",
+        f"interpret={int(bool(interpret))}",
+        f"schedule={schedule or 'plan'}",
+        f"steps={'single' if steps is None else int(steps)}",
+        f"schema={PLAN_SCHEMA_VERSION}",
+    ])
+
+
+# --------------------------------------------------------------------------
+# Time-loop update-rule normalisation
+# --------------------------------------------------------------------------
+
+def adapt_update(update):
+    """Normalise a time-loop update rule to ``fn(fields, outputs, scalars)``.
+
+    Historical rules take ``(fields, outputs)``; rules that need runtime
+    scalars inside the fused loop (a traced ``dt``, the serving layer's
+    bucket-size scalars) take ``(fields, outputs, scalars)``.  Every
+    time-loop lowering routes the rule through here, so both signatures
+    work on all backends, local and sharded.  Idempotent: adapting an
+    already-adapted rule returns it unchanged.
+    """
+    if update is None or getattr(update, "_takes_scalars", False):
+        return update
+    try:
+        params = list(inspect.signature(update).parameters.values())
+        takes3 = (len([q for q in params
+                       if q.kind in (q.POSITIONAL_ONLY,
+                                     q.POSITIONAL_OR_KEYWORD)]) >= 3
+                  or any(q.kind == q.VAR_POSITIONAL for q in params))
+    except (TypeError, ValueError):
+        takes3 = False
+    if takes3:
+        def fn(fields, outputs, scalars, _u=update):
+            return _u(fields, outputs, scalars)
+    else:
+        def fn(fields, outputs, scalars, _u=update):
+            return _u(fields, outputs)
+    fn._takes_scalars = True
+    return fn
 
 
 @dataclasses.dataclass

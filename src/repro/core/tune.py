@@ -34,11 +34,14 @@ winning plan.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import json
 import os
+import threading
 import time
+import uuid
 from typing import Callable, Sequence
 
 import jax
@@ -47,12 +50,14 @@ import numpy as np
 
 from .. import hw
 from .ir import Program
-from .schedule import (DataflowPlan, auto_plan, plan_from_dict, plan_to_dict,
-                       program_fingerprint, vmem_cost)
+from .schedule import (PLAN_SCHEMA_VERSION, DataflowPlan, auto_plan,
+                       plan_from_dict, plan_to_dict, program_fingerprint,
+                       vmem_cost)
 
 __all__ = [
     "TuneConfig", "PlanCache", "TuneResult", "cache_key", "tune_plan",
-    "get_tuned_plan", "default_cache_path",
+    "get_tuned_plan", "default_cache_path", "make_serve_record",
+    "read_serve_record",
 ]
 
 #: Environment variable overriding the default plan-cache location.
@@ -116,6 +121,7 @@ class PlanCache:
     def __init__(self, path: str | None = "auto"):
         self.path = default_cache_path() if path == "auto" else path
         self._mem: dict = {}
+        self._lock = threading.Lock()
 
     def _load(self) -> dict:
         if self.path and os.path.exists(self.path):
@@ -130,23 +136,59 @@ class PlanCache:
         return {"version": CACHE_SCHEMA_VERSION, "entries": {}}
 
     def lookup(self, key: str) -> dict | None:
-        if key in self._mem:
-            return self._mem[key]
+        with self._lock:
+            if key in self._mem:
+                return self._mem[key]
         return self._load()["entries"].get(key)
 
     def store(self, key: str, record: dict) -> None:
-        self._mem[key] = record
-        if not self.path:
+        """Persist ``record`` under ``key`` — safe under concurrent writers.
+
+        Two tuners (or two serving engines) sharing one cache file must not
+        clobber each other's entries, so the rewrite is an atomic
+        read-merge-replace: an advisory ``flock`` on ``<path>.lock``
+        serialises writers (across objects *and* processes), each writer
+        re-reads the file under the lock, layers its own entries on top,
+        writes to a per-writer unique temp file, and ``os.replace``s it in
+        — readers never see a torn or truncated JSON, and no store loses
+        another writer's entries.  On platforms without ``fcntl`` the lock
+        degrades to best-effort merge-on-write.
+        """
+        with self._lock:
+            self._mem[key] = record
+            if not self.path:
+                return
+            d = os.path.dirname(self.path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with self._file_lock():
+                # re-read under the lock so entries written by other
+                # processes/threads since our last load survive the rewrite
+                doc = self._load()
+                doc["entries"].update(self._mem)
+                tmp = (f"{self.path}.{os.getpid()}."
+                       f"{uuid.uuid4().hex[:8]}.tmp")
+                try:
+                    with open(tmp, "w") as f:
+                        json.dump(doc, f, indent=2)
+                    os.replace(tmp, self.path)
+                finally:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+
+    @contextlib.contextmanager
+    def _file_lock(self):
+        try:
+            import fcntl
+        except ImportError:  # non-POSIX: best-effort merge-on-write
+            yield
             return
-        doc = self._load()
-        doc["entries"][key] = record
-        d = os.path.dirname(self.path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(doc, f, indent=2)
-        os.replace(tmp, self.path)
+        with open(f"{self.path}.lock", "w") as lf:
+            fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(lf, fcntl.LOCK_UN)
 
 
 def _mesh_tag(mesh, mesh_axes) -> str:
@@ -476,3 +518,42 @@ def get_tuned_plan(p: Program, grid, *, backend: str = "pallas",
     return tune_plan(p, grid, backend=backend, interpret=interpret,
                      dtype=dtype, update=update, config=config, cache=cache,
                      mesh=mesh, mesh_axes=mesh_axes)
+
+
+# --------------------------------------------------------------------------
+# Serving-layer executor records (repro.serve's slice of the plan cache)
+# --------------------------------------------------------------------------
+
+def make_serve_record(plan: DataflowPlan, carry_write: str,
+                      bucket: Sequence[int], steps: int | None) -> dict:
+    """Executor record the serving engine persists per compiled bucket: the
+    plan the executable was built from plus enough metadata that a *fresh
+    engine process* can rebuild the identical executable without planning,
+    tuning, or guessing.  Schema-stamped like tuned-plan records — see
+    :func:`read_serve_record`."""
+    return {
+        "kind": "serve_executor",
+        "schema": PLAN_SCHEMA_VERSION,
+        "plan": plan_to_dict(plan),
+        "carry_write": carry_write,
+        "bucket": [int(b) for b in bucket],
+        "steps": None if steps is None else int(steps),
+        "jax_version": jax.__version__,
+        "stored_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
+def read_serve_record(rec: dict | None):
+    """Decode a serving executor record: ``(plan, carry_write)``, or ``None``
+    when the record is absent, malformed, or written under a different
+    ``PLAN_SCHEMA_VERSION`` — a stale-schema record is a clean *miss* (the
+    engine replans and overwrites), never a misdecoded plan."""
+    if not isinstance(rec, dict) or rec.get("kind") != "serve_executor":
+        return None
+    if rec.get("schema") != PLAN_SCHEMA_VERSION:
+        return None
+    try:
+        plan = plan_from_dict(rec["plan"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    return plan, rec.get("carry_write", "repad")

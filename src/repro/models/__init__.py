@@ -1,3 +1,4 @@
 from .transformer import (init_lm, lm_forward, lm_loss, init_cache,
                           prefill, decode_step)
 from .whisper import init_whisper, whisper_forward, whisper_loss
+from .lm_serve import LMServeStats, ServeEngine, sample_token

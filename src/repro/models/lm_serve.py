@@ -1,0 +1,79 @@
+"""Batched LM serving engine: prefill + jit'd decode over KV caches.
+
+Lives under :mod:`repro.models` because it is model-side scaffolding — the
+token sampler and the fixed-batch generate loop the LM/whisper substrate
+tests exercise.  (``repro.serve`` is the *stencil* serving subsystem; the
+name ``ServeEngine`` is kept for the LM engine so substrate callers read
+naturally.)
+
+Local (SWA) layers hold ring-buffer caches (length = window) — the sequence
+shift buffer — so decode state is bounded regardless of generation length;
+global layers hold full caches up to ``max_len``.  Requests are served in
+fixed batches (continuous batching hooks: ``add_request`` queues, a slot
+becomes free when a sequence emits EOS or hits its token budget).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .transformer import decode_step, prefill
+
+
+def sample_token(logits, key, temperature: float = 0.0):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class LMServeStats:
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
+                 temperature: float = 0.0, eos: int = -1):
+        self.cfg, self.params = cfg, params
+        self.batch, self.max_len = batch, max_len
+        self.temperature, self.eos = temperature, eos
+        self.stats = LMServeStats()
+
+        def _decode(params, cache, tokens, pos, key):
+            logits, cache = decode_step(cfg, params, cache, tokens, pos)
+            nxt = sample_token(logits, key, temperature)
+            return nxt, logits, cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            functools.partial(prefill, cfg, max_len=max_len))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 seed: int = 0):
+        """prompts: (B, S) int32 (right-aligned, padded with 0 on the left is
+        the caller's concern — fixed-shape serving).  Returns (B, new) ids."""
+        B, S = prompts.shape
+        assert B == self.batch
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        self.stats.prefill_tokens += B * S
+        key = jax.random.PRNGKey(seed)
+        tok = sample_token(logits, key, self.temperature)
+        out = [tok]
+        done = (tok == self.eos)
+        for i in range(max_new_tokens - 1):
+            key, sub = jax.random.split(key)
+            tok, logits, cache = self._decode(self.params, cache, tok,
+                                              jnp.int32(S + i), sub)
+            out.append(tok)
+            self.stats.decode_tokens += B
+            done = done | (tok == self.eos)
+            if bool(done.all()):
+                break
+        return np.stack([np.asarray(t) for t in out], axis=1)

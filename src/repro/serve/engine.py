@@ -1,74 +1,411 @@
-"""Batched serving engine: prefill + jit'd decode over KV caches.
+"""StencilEngine — batched, cached, concurrent stencil execution.
 
-Local (SWA) layers hold ring-buffer caches (length = window) — the sequence
-shift buffer — so decode state is bounded regardless of generation length;
-global layers hold full caches up to ``max_len``.  Requests are served in
-fixed batches (continuous batching hooks: ``add_request`` queues, a slot
-becomes free when a sequence emits EOS or hits its token budget).
+The serving layer turns the compile pipeline into a long-lived service:
+requests (program, fields, steps, boundary) arrive on a bounded queue, a
+single worker thread micro-batches them, and each distinct *bucket*
+(program fingerprint x lane-quantised grid bucket x backend/compile options
+x update rule) is compiled exactly once — warm requests re-trace nothing.
+
+Three layers of reuse, coarsest first:
+
+1. **executor table** (in-memory): ``bucket key -> _BucketExecutor`` holding
+   the jitted, ``vmap``-batched executable.  A hot request is a dict lookup.
+2. **plan records** (:class:`~repro.core.tune.PlanCache`): on an executor
+   build the engine consults the persistent cache for a serving record
+   (:func:`~repro.core.tune.read_serve_record`) and rebuilds from the stored
+   plan without re-planning; a build that had to plan stores its record so
+   the *next process* skips the work.  Stale-schema records miss cleanly.
+3. **shape buckets** (:mod:`repro.serve.bucket`): request grids round up to
+   quantised buckets and grid sizes enter the trace as scalars, so mixed
+   request shapes share executors and batch together under ``vmap``.
+
+Threading model: ``submit`` may be called from any thread (it only
+validates, keys, and enqueues); all JAX work happens on the one worker
+thread, so executors and stats need no locking of their own.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Mapping
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs.base import ModelConfig
-from ..models import decode_step, init_cache, prefill
-
-
-def sample_token(logits, key, temperature: float = 0.0):
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+from .. import hw
+from ..core.ir import Program
+from ..core.pipeline import compile_program
+from ..core.schedule import BucketSpec, bucket_fingerprint, bucket_for
+from ..core.tune import PlanCache, make_serve_record, read_serve_record
+from .bucket import embed_request, serving_program, wrap_update
+from .stats import ServeStats
 
 
 @dataclasses.dataclass
-class ServeStats:
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
+class StencilRequest:
+    """One unit of serving work.
+
+    ``fields`` are real-grid arrays (the grid is their common shape);
+    ``steps`` + ``update`` select the fused time loop (result = final
+    fields), both None selects a single application (result = program
+    outputs).  ``update_key`` names the update rule for executor keying —
+    required whenever two *different* rules share a qualname (lambdas,
+    closures built per call); it defaults to the rule's qualified name.
+    ``boundary`` overrides the program's declarations as in
+    ``compile_program``.  ``timeout`` (seconds) expires the request if it
+    is still queued when the deadline passes.
+    """
+
+    program: Program
+    fields: Mapping
+    scalars: Mapping | None = None
+    coeffs: Mapping | None = None
+    steps: int | None = None
+    update: Callable | None = None
+    update_key: str | None = None
+    boundary: object = None
+    timeout: float | None = None
+
+    def grid(self) -> tuple:
+        shapes = {tuple(np.shape(v)) for v in self.fields.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"request fields disagree on grid: {shapes}")
+        return next(iter(shapes))
 
 
-class ServeEngine:
-    def __init__(self, cfg: ModelConfig, params, batch: int, max_len: int,
-                 temperature: float = 0.0, eos: int = -1):
-        self.cfg, self.params = cfg, params
-        self.batch, self.max_len = batch, max_len
-        self.temperature, self.eos = temperature, eos
+@dataclasses.dataclass
+class ServeResult:
+    outputs: dict                 # real-grid arrays (cropped out of bucket)
+    bucket: BucketSpec
+    key: str
+    latency_ms: float
+    batch_size: int               # real requests in the executed batch
+
+
+@dataclasses.dataclass
+class _Item:
+    req: StencilRequest
+    program: Program              # serving program (boundary applied)
+    spec: BucketSpec
+    key: str
+    future: Future
+    submitted: float
+    deadline: float | None
+
+
+class _BucketExecutor:
+    """One compiled bucket: the raw executable plus its batched jit."""
+
+    def __init__(self, program, spec, steps, batched, unbatched_raw, plan,
+                 carry_write):
+        self.program = program
+        self.spec = spec
+        self.steps = steps
+        self.batched = batched
+        self._raw = unbatched_raw
+        self.plan = plan
+        self.carry_write = carry_write
+        self.vmap_failed = False
+
+    def fallback_unrolled(self):
+        """Replace the vmapped dispatch with a jitted unrolled batch (the
+        escape hatch for lowerings without a batching rule)."""
+        raw = self._raw
+
+        def unrolled(fields, scalars, coeffs):
+            n = next(iter(fields.values())).shape[0]
+            outs = [raw({f: v[i] for f, v in fields.items()},
+                        {s: v[i] for s, v in scalars.items()},
+                        {c: v[i] for c, v in coeffs.items()})
+                    for i in range(n)]
+            return {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
+
+        self.batched = jax.jit(unrolled)
+        self.vmap_failed = True
+
+
+def _pow2_at_least(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class StencilEngine:
+    """Async serving front over the compile pipeline.
+
+    ``submit`` returns a :class:`concurrent.futures.Future` resolving to a
+    :class:`ServeResult`; ``run`` is the synchronous one-request helper.
+    ``autostart=False`` leaves the worker thread unstarted (requests queue
+    up; call :meth:`start` to begin draining — used by the bounded-queue
+    tests and by callers that want to pre-fill a batch).
+    """
+
+    def __init__(self, *, backend: str = "jnp_fused", interpret: bool = True,
+                 schedule: str | None = None, strategy: str = "auto",
+                 dtype: str = "float32", max_batch: int = 8,
+                 window_s: float = 0.002, queue_depth: int = 64,
+                 plan_cache: PlanCache | None = None, lane: int = hw.LANE,
+                 autostart: bool = True):
+        self.backend = backend
+        self.interpret = interpret
+        self.schedule = schedule
+        self.strategy = strategy
+        self.dtype = dtype
+        self.max_batch = int(max_batch)
+        self.window_s = float(window_s)
+        self.plan_cache = plan_cache
+        self.lane = int(lane)
         self.stats = ServeStats()
+        self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
+        self._executors: dict = {}
+        self._traces = [0]
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._np_dtype = np.dtype(dtype)
+        if autostart:
+            self.start()
 
-        def _decode(params, cache, tokens, pos, key):
-            logits, cache = decode_step(cfg, params, cache, tokens, pos)
-            nxt = sample_token(logits, key, temperature)
-            return nxt, logits, cache
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._worker,
+                                            name="stencil-serve", daemon=True)
+            self._thread.start()
 
-        self._decode = jax.jit(_decode, donate_argnums=(1,))
-        self._prefill = jax.jit(
-            functools.partial(prefill, cfg, max_len=max_len))
-
-    def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 seed: int = 0):
-        """prompts: (B, S) int32 (right-aligned, padded with 0 on the left is
-        the caller's concern — fixed-shape serving).  Returns (B, new) ids."""
-        B, S = prompts.shape
-        assert B == self.batch
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
-        self.stats.prefill_tokens += B * S
-        key = jax.random.PRNGKey(seed)
-        tok = sample_token(logits, key, self.temperature)
-        out = [tok]
-        done = (tok == self.eos)
-        for i in range(max_new_tokens - 1):
-            key, sub = jax.random.split(key)
-            tok, logits, cache = self._decode(self.params, cache, tok,
-                                              jnp.int32(S + i), sub)
-            out.append(tok)
-            self.stats.decode_tokens += B
-            done = done | (tok == self.eos)
-            if bool(done.all()):
+    def close(self) -> None:
+        self._stop.set()
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join(timeout=30)
+        while True:
+            try:
+                it = self._q.get_nowait()
+            except queue.Empty:
                 break
-        return np.stack([np.asarray(t) for t in out], axis=1)
+            it.future.set_exception(RuntimeError("engine closed"))
+            self.stats.failed += 1
+
+    def __enter__(self):
+        self.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ------------------------------------------------------------------
+    # request front
+    # ------------------------------------------------------------------
+    def describe(self, req: StencilRequest):
+        """Validate a request and resolve its serving identity:
+        ``(serving_program, BucketSpec, executor key)`` — exactly what the
+        worker will compile and cache under.  Useful for pre-warming and
+        for tests poking at the plan cache."""
+        if (req.steps is None) != (req.update is None):
+            raise ValueError("steps and update go together: both set "
+                             "(fused loop) or both None (single apply)")
+        p = req.program
+        if req.boundary is not None:
+            p = p.with_boundary(req.boundary)
+        sp = serving_program(p)
+        missing = set(sp.input_fields()) - set(req.fields)
+        if missing:
+            raise ValueError(f"request missing input fields {sorted(missing)}")
+        missing = set(p.scalars) - set(req.scalars or {})
+        if missing:
+            raise ValueError(f"request missing scalars {sorted(missing)}")
+        spec = bucket_for(sp, req.grid(), lane=self.lane)
+        ukey = req.update_key
+        if ukey is None:
+            ukey = ("none" if req.update is None else
+                    f"{req.update.__module__}.{req.update.__qualname__}")
+        key = "|".join([
+            bucket_fingerprint(sp, spec.bucket, backend=self.backend,
+                               dtype=self.dtype, interpret=self.interpret,
+                               schedule=self.schedule, steps=req.steps),
+            f"update={ukey}",
+            f"jax={jax.__version__}",
+        ])
+        return sp, spec, key
+
+    def submit(self, req: StencilRequest) -> Future:
+        """Validate, key, and enqueue; raises ``queue.Full`` when the
+        bounded queue is at depth (backpressure, not silent dropping)."""
+        sp, spec, key = self.describe(req)
+        now = time.monotonic()
+        item = _Item(req=req, program=sp, spec=spec, key=key,
+                     future=Future(), submitted=now,
+                     deadline=None if req.timeout is None
+                     else now + req.timeout)
+        self._q.put_nowait(item)
+        self.stats.submitted += 1
+        return item.future
+
+    def run(self, req: StencilRequest, timeout: float | None = None
+            ) -> ServeResult:
+        return self.submit(req).result(timeout)
+
+    def map(self, reqs, timeout: float | None = None) -> list:
+        futs = [self.submit(r) for r in reqs]
+        return [f.result(timeout) for f in futs]
+
+    # ------------------------------------------------------------------
+    # worker: micro-batching loop
+    # ------------------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                first = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            t0 = time.monotonic()
+            # micro-batch window: wait briefly for same-bucket company
+            while len(batch) < self.max_batch:
+                left = self.window_s - (time.monotonic() - t0)
+                if left <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=left))
+                except queue.Empty:
+                    break
+            groups: dict = {}
+            for it in batch:
+                groups.setdefault(it.key, []).append(it)
+            for key, items in groups.items():
+                self._process_group(key, items)
+
+    def _process_group(self, key: str, items: list) -> None:
+        now = time.monotonic()
+        live = []
+        for it in items:
+            if it.deadline is not None and now > it.deadline:
+                self.stats.timeouts += 1
+                it.future.set_exception(
+                    TimeoutError(f"request expired after {it.req.timeout}s "
+                                 "in queue"))
+            else:
+                live.append(it)
+        if not live:
+            return
+        try:
+            if key in self._executors:
+                self.stats.exec_hits += len(live)
+                ex = self._executors[key]
+            else:
+                self.stats.exec_misses += len(live)
+                ex = self._build_executor(key, live[0])
+                self._executors[key] = ex
+        except Exception as e:  # compile/planning failure fails the group
+            for it in live:
+                self.stats.failed += 1
+                it.future.set_exception(e)
+            return
+        for i in range(0, len(live), self.max_batch):
+            self._run_batch(ex, live[i:i + self.max_batch])
+
+    # ------------------------------------------------------------------
+    # executor build (plan-record reuse lives here)
+    # ------------------------------------------------------------------
+    def _build_executor(self, key: str, item: _Item) -> _BucketExecutor:
+        sp, spec, req = item.program, item.spec, item.req
+        plan = carry_write = None
+        record_hit = False
+        if self.plan_cache is not None:
+            dec = read_serve_record(self.plan_cache.lookup(key))
+            if dec is not None:
+                plan, carry_write = dec
+                record_hit = True
+                self.stats.plan_hits += 1
+            else:
+                self.stats.plan_misses += 1
+        update = (None if req.update is None
+                  else wrap_update(sp, spec, req.update))
+        ex = compile_program(
+            sp, spec.bucket, backend=self.backend, plan=plan, jit=False,
+            interpret=self.interpret, dtype=self.dtype,
+            strategy=self.strategy, steps=req.steps, update=update,
+            carry_write=carry_write, schedule=self.schedule,
+            plan_cache=self.plan_cache)
+        self.stats.compiles += 1
+        cw = ex.time_spec.carry_write if ex.time_spec is not None else "repad"
+        if self.plan_cache is not None and not record_hit:
+            self.plan_cache.store(
+                key, make_serve_record(ex.plan, cw, spec.bucket, req.steps))
+
+        counter = self._traces
+
+        def counted(fields, scalars, coeffs, _raw=ex._fn):
+            counter[0] += 1
+            return _raw(fields, scalars, coeffs)
+
+        batched = jax.jit(jax.vmap(counted))
+        return _BucketExecutor(program=sp, spec=spec, steps=req.steps,
+                               batched=batched, unbatched_raw=counted,
+                               plan=ex.plan, carry_write=cw)
+
+    # ------------------------------------------------------------------
+    # batch execution
+    # ------------------------------------------------------------------
+    def _run_batch(self, ex: _BucketExecutor, items: list) -> None:
+        t0 = time.monotonic()
+        try:
+            embedded = [embed_request(ex.program, it.spec, it.req.fields,
+                                      it.req.scalars, it.req.coeffs)
+                        for it in items]
+            n = len(items)
+            pad = _pow2_at_least(n)
+
+            def stack(leaves, cast):
+                arr = np.stack(leaves)
+                if cast and arr.dtype != self._np_dtype:
+                    arr = arr.astype(self._np_dtype)
+                if pad > n:  # replicate slot 0 into the filler slots
+                    arr = np.concatenate(
+                        [arr, np.repeat(arr[:1], pad - n, axis=0)])
+                return arr
+
+            fields = {f: stack([e[0][f] for e in embedded], True)
+                      for f in embedded[0][0]}
+            scalars = {s: stack(np.asarray([e[1][s] for e in embedded],
+                                           dtype=np.float32), False)
+                       for s in embedded[0][1]}
+            coeffs = {c: stack([e[2][c] for e in embedded], True)
+                      for c in embedded[0][2]}
+            try:
+                out = ex.batched(fields, scalars, coeffs)
+            except Exception:
+                if ex.vmap_failed:
+                    raise
+                ex.fallback_unrolled()
+                out = ex.batched(fields, scalars, coeffs)
+            out = {k: np.asarray(v) for k, v in out.items()}
+            self.stats.batches += 1
+            self.stats.batched_requests += n
+            self.stats.padded_slots += pad - n
+            done = time.monotonic()
+            self.stats.wall_s += done - t0
+            for i, it in enumerate(items):
+                res = ServeResult(
+                    outputs={k: v[i][it.spec.interior()]
+                             for k, v in out.items()},
+                    bucket=it.spec, key=it.key,
+                    latency_ms=(done - it.submitted) * 1e3, batch_size=n)
+                self.stats.completed += 1
+                self.stats.record_latency(res.latency_ms)
+                it.future.set_result(res)
+        except Exception as e:
+            for it in items:
+                if not it.future.done():
+                    self.stats.failed += 1
+                    it.future.set_exception(e)
+        finally:
+            self.stats.traces = self._traces[0]

@@ -1,0 +1,81 @@
+"""Serving metrics — counters the engine maintains and tests assert on.
+
+All mutation happens either on the worker thread or under the engine's
+submit lock, so plain ints suffice; ``snapshot()`` returns a plain dict
+for logging/benchmark rows.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeStats:
+    submitted: int = 0
+    completed: int = 0
+    failed: int = 0
+    timeouts: int = 0
+
+    # executor-table hits vs builds (a build may still reuse a persisted plan)
+    exec_hits: int = 0
+    exec_misses: int = 0
+    # PlanCache serve-record hits vs misses on executor build
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+    traces: int = 0          # update-rule traces observed (0 when warm)
+    compiles: int = 0        # executor builds that ran compile_program
+
+    batches: int = 0
+    batched_requests: int = 0
+    padded_slots: int = 0    # replicated filler slots across all batches
+
+    wall_s: float = 0.0      # time spent inside batch execution
+
+    def __post_init__(self):
+        self._lat_ms = collections.deque(maxlen=4096)
+
+    def record_latency(self, ms: float) -> None:
+        self._lat_ms.append(float(ms))
+
+    def reset_latencies(self) -> None:
+        """Drop recorded latencies (e.g. after a warm-up phase, so the
+        quantiles describe steady-state traffic, not compiles)."""
+        self._lat_ms.clear()
+
+    # ------------------------------------------------------------------
+    def cache_hit_rate(self) -> float:
+        n = self.exec_hits + self.exec_misses
+        return self.exec_hits / n if n else 0.0
+
+    def occupancy(self) -> float:
+        """Mean fraction of batch slots holding real requests."""
+        slots = self.batched_requests + self.padded_slots
+        return self.batched_requests / slots if slots else 0.0
+
+    def throughput(self) -> float:
+        """Completed requests per second of batch-execution wall time."""
+        return self.completed / self.wall_s if self.wall_s > 0 else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self._lat_ms:
+            return 0.0
+        xs = sorted(self._lat_ms)
+        i = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+        return xs[i]
+
+    def p50_ms(self) -> float:
+        return self.latency_quantile(0.50)
+
+    def p99_ms(self) -> float:
+        return self.latency_quantile(0.99)
+
+    def snapshot(self) -> dict:
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self)}
+        d.update(hit_rate=self.cache_hit_rate(), occupancy=self.occupancy(),
+                 throughput=self.throughput(), p50_ms=self.p50_ms(),
+                 p99_ms=self.p99_ms(), latencies=len(self._lat_ms))
+        return d

@@ -21,7 +21,7 @@ from repro.checkpoint import (AsyncCheckpointer, latest_step,
 from repro.configs import get_smoke
 from repro.data import BatchSpec, SyntheticLM
 from repro.models import init_lm
-from repro.serve import ServeEngine
+from repro.models import ServeEngine
 from repro.train import OptConfig, TrainConfig, Trainer
 from repro.train.compress import compress_decompress, ef_init
 from repro.train.optimizer import (adamw_init, adamw_update,

@@ -15,7 +15,7 @@ from repro.core import compile_program, run_time_loop
 from repro.core.schedule import vmem_cost
 from repro.configs import get_smoke
 from repro.data import BatchSpec, SyntheticLM
-from repro.serve import ServeEngine
+from repro.models import ServeEngine
 from repro.train import OptConfig, TrainConfig, Trainer
 
 

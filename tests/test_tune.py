@@ -391,3 +391,78 @@ def test_tuner_enumerates_stream_and_block_schedules():
     jcands = _candidates(pw_advection(), GRID, "jnp_fused", True, "float32",
                          cfg, with_loop=True)
     assert {c.plan.schedule for c in jcands} == {"block"}
+
+
+def test_plan_cache_concurrent_writers_merge(tmp_path):
+    """N threads storing distinct keys into one cache file must all
+    survive: the rewrite is merge-on-write over a fresh re-read with a
+    unique temp path per writer, so no store clobbers another's entries
+    and no reader ever sees a torn file."""
+    import threading
+
+    path = str(tmp_path / "plans.json")
+    n_threads, per_thread = 8, 10
+    plan = auto_plan(pw_advection(), (8, 8, 16), backend="jnp_fused")
+    rec = {"plan": plan_to_dict(plan), "carry_write": "repad"}
+    caches = [PlanCache(path) for _ in range(n_threads)]
+    start = threading.Barrier(n_threads)
+    errs = []
+
+    def writer(i):
+        try:
+            start.wait()
+            for j in range(per_thread):
+                caches[i].store(f"w{i}/k{j}", dict(rec, label=f"{i}/{j}"))
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["version"] == CACHE_SCHEMA_VERSION
+    keys = {f"w{i}/k{j}" for i in range(n_threads)
+            for j in range(per_thread)}
+    assert keys <= set(doc["entries"])
+    # and a fresh cache object reads every entry back
+    fresh = PlanCache(path)
+    for k in keys:
+        assert fresh.lookup(k)["carry_write"] == "repad"
+
+
+def test_plan_cache_shared_object_threadsafe(tmp_path):
+    """One PlanCache instance shared by many threads (the serving engine's
+    shape): stores and lookups interleave without losing entries."""
+    import threading
+
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path)
+    plan = auto_plan(pw_advection(), (8, 8, 16), backend="jnp_fused")
+    rec = {"plan": plan_to_dict(plan), "carry_write": "inplace"}
+    start = threading.Barrier(4)
+    errs = []
+
+    def worker(i):
+        try:
+            start.wait()
+            for j in range(12):
+                cache.store(f"t{i}/k{j}", dict(rec))
+                assert cache.lookup(f"t{i}/k{j}") is not None
+        except Exception as e:  # pragma: no cover - failure reporting
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    fresh = PlanCache(path)
+    for i in range(4):
+        for j in range(12):
+            assert fresh.lookup(f"t{i}/k{j}")["carry_write"] == "inplace"
