@@ -122,16 +122,15 @@ def run_schedule_rows(emit_row, grid: tuple, steps: int) -> None:
     adjacent ``fig4/.../fused_loop`` rows in the same artifact."""
     import jax
     from repro.apps import pw_advection, pw_advection_update
-    from repro.core import compile_program
+    from repro.core import CompileOptions, compile_program
 
     p = pw_advection()
     update = pw_advection_update(0.1)
     tag = "x".join(str(g) for g in grid)
     fields, scalars, coeffs = fig4_throughput._data(p, grid)
-    sps = {}
-    for schedule in ("block", "stream"):
-        exN = compile_program(p, grid, backend="pallas", steps=steps,
-                              update=update, schedule=schedule)
+
+    def measure(opts, nsteps):
+        exN = compile_program(p, grid, options=opts)
         jax.block_until_ready(exN(fields, scalars, coeffs)["u"])
         dt = float("inf")
         for _ in range(3):                      # best-of-3 (CPU noise)
@@ -139,11 +138,32 @@ def run_schedule_rows(emit_row, grid: tuple, steps: int) -> None:
             out = exN(fields, scalars, coeffs)
             jax.block_until_ready(out["u"])
             dt = min(dt, time.perf_counter() - t0)
+        return dt
+
+    sps = {}
+    for schedule in ("block", "stream"):
+        dt = measure(CompileOptions(backend="pallas", steps=steps,
+                                    update=update, schedule=schedule), steps)
         sps[schedule] = steps / dt
         emit_row(f"sched/pw_advection/{tag}/pallas/{schedule}/fused_loop",
                  dt * 1e6, f"{steps / dt:.2f} steps/s")
     emit_row(f"sched/pw_advection/{tag}/pallas/stream_vs_block", 0.0,
              f"{sps['stream'] / sps['block']:.2f}x stream vs block")
+
+    # temporal blocking through the stream sweep: T=4 chains four time
+    # steps per sweep (inputs fetched from HBM once per 4 steps), T=1 is
+    # the unchained baseline at the same step count
+    tsteps = max(steps, 4)
+    tiled = {}
+    for tt in (1, 4):
+        dt = measure(CompileOptions(backend="pallas", steps=tsteps,
+                                    update=update, schedule="stream",
+                                    time_tile=tt), tsteps)
+        tiled[tt] = tsteps / dt
+        emit_row(f"sched/pw_advection/{tag}/pallas/stream/time_tile={tt}"
+                 f"/fused_loop", dt * 1e6, f"{tsteps / dt:.2f} steps/s")
+    emit_row(f"sched/pw_advection/{tag}/pallas/stream/t4_vs_t1", 0.0,
+             f"{tiled[4] / tiled[1]:.2f}x time_tile=4 vs 1")
 
 
 def run_sharded_loop(emit_row, grid: tuple, steps: int,

@@ -23,7 +23,7 @@ import jax
 import numpy as np
 
 from repro.apps import pw_advection, pw_advection_update
-from repro.core import PlanCache, TuneConfig, compile_program
+from repro.core import CompileOptions, PlanCache, TuneConfig, compile_program
 
 ap = argparse.ArgumentParser(description=__doc__)
 ap.add_argument("--backend", default="jnp_fused",
@@ -45,19 +45,21 @@ _tmpdir = tempfile.TemporaryDirectory(prefix="stencil_hmls_")
 cache = PlanCache(path=f"{_tmpdir.name}/plan_cache.json")
 cfg = TuneConfig(steps=args.steps, repeats=2, max_measured=4)
 
+# one frozen CompileOptions is shared verbatim between both tuned compiles
+# (the canonical API; loose kwargs still work and normalise to the same)
+opts = CompileOptions(backend=args.backend, strategy="tuned",
+                      steps=args.steps, update=update,
+                      tune_config=cfg, plan_cache=cache)
+
 # -- 1. cache miss: the tuner searches the plan space by measurement --------
 t0 = time.perf_counter()
-ex_tuned = compile_program(p, grid, backend=args.backend, strategy="tuned",
-                           steps=args.steps, update=update,
-                           tune_config=cfg, plan_cache=cache)
+ex_tuned = compile_program(p, grid, options=opts)
 print(f"tuned (cache miss, measured search): {time.perf_counter()-t0:.2f}s")
 print("  winning plan:", ex_tuned.plan.describe())
 
 # -- 2. cache hit: zero timed runs ------------------------------------------
 t0 = time.perf_counter()
-compile_program(p, grid, backend=args.backend, strategy="tuned",
-                steps=args.steps, update=update,
-                tune_config=cfg, plan_cache=cache)
+compile_program(p, grid, options=opts)
 print(f"tuned (cache hit): {time.perf_counter()-t0:.2f}s  -> {cache.path}")
 
 # -- 3. tuned vs heuristic: same numbers, at least the same speed -----------

@@ -90,7 +90,12 @@ def plan_bytes_per_point(p: Program, plan, grid, graph=None) -> float:
     * ``"stream"`` — the shift-register sweep fetches **each input cell
       once per region sweep** (the paper's headline property); the only
       overhead is the padded halo ring itself, ``prod(padded extents) /
-      prod(grid)``, which vanishes at production grids.
+      prod(grid)``, which vanishes at production grids.  With temporal
+      blocking (effective ``time_tile = T > 1`` on the graph) one sweep
+      advances T time steps, so the whole sweep's traffic — inputs read
+      through the T-deepened (chained) halo, outputs written once — is
+      charged **once per T steps**: bytes/point/step shrinks ~1/T, which
+      is exactly the reuse the tuner searches T for.
 
     Outputs are written once either way.  The jnp backends ignore plan
     geometry and collapse to :func:`model_program`'s backend-level numbers.
@@ -104,14 +109,16 @@ def plan_bytes_per_point(p: Program, plan, grid, graph=None) -> float:
         if graph is None:
             from ..core.dataflow import lower_to_dataflow
             graph = lower_to_dataflow(p, plan)
+        T = max(1, int(getattr(graph, "time_tile", 1)))
         bytes_pp = 0.0
-        for region in graph.regions:
-            gh = region.halo
+        # chained halos: the sweep's real fetch geometry under temporal
+        # blocking (identical to the per-step halos at T = 1)
+        for gh in graph.group_halos():
             padded = [grid[a] + int(gh.input_halo[a, 0])
                       + int(gh.input_halo[a, 1]) for a in range(p.ndim)]
             overhead = float(np.prod(padded)) / float(np.prod(grid))
-            bytes_pp += len(gh.group_inputs) * overhead * bs
-            bytes_pp += len(gh.group_outputs) * bs
+            bytes_pp += (len(gh.group_inputs) * overhead * bs
+                         + len(gh.group_outputs) * bs) / T
         return bytes_pp
     blk = np.minimum(np.asarray(plan.block[:p.ndim], dtype=np.int64),
                      np.asarray(grid, dtype=np.int64))
@@ -129,20 +136,31 @@ def plan_bytes_per_point(p: Program, plan, grid, graph=None) -> float:
 def _plan_flops_per_point(p: Program, plan, grid, graph=None) -> float:
     """Recompute-inflated flops/point: block margins extend every tile,
     stream margins only widen the non-stream axes of each plane (stream-axis
-    dependencies ride in ring buffers, recompute-free)."""
+    dependencies ride in ring buffers, recompute-free).  A temporal chain
+    (effective ``time_tile = T > 1``) runs every op once per chain stage;
+    earlier stages compute over margin-extended planes (stage ``s`` adds
+    ``(T-1-s)`` per-step halo reaches on the non-stream axes, mirroring the
+    kernel's ``stage_margins``) so the redundant boundary work the chain
+    trades for HBM traffic is priced in, amortised over the T steps one
+    sweep advances."""
     grid = [int(g) for g in grid]
     if getattr(plan, "schedule", "block") == "stream":
         if graph is None:
             from ..core.dataflow import lower_to_dataflow
             graph = lower_to_dataflow(p, plan)
+        T = max(1, int(getattr(graph, "time_tile", 1)))
         flops_pp = 0.0
         plane = np.asarray(grid[1:], dtype=np.int64)
         for region in graph.regions:
-            for i in region.ops:
-                m = region.halo.margins[i]
-                ext = plane + m[1:, 0] + m[1:, 1]
-                recompute = float(np.prod(ext)) / float(np.prod(plane))
-                flops_pp += count_flops(p.ops[i].expr) * recompute
+            ih = region.halo.input_halo          # per-step reach
+            step = ih[1:, 0] + ih[1:, 1]
+            for s in range(T):
+                acc = T - 1 - s
+                for i in region.ops:
+                    m = region.halo.margins[i]
+                    ext = plane + m[1:, 0] + m[1:, 1] + acc * step
+                    recompute = float(np.prod(ext)) / float(np.prod(plane))
+                    flops_pp += count_flops(p.ops[i].expr) * recompute / T
         return flops_pp
     blk = np.minimum(np.asarray(plan.block[:p.ndim], dtype=np.int64),
                      np.asarray(grid, dtype=np.int64))

@@ -4,11 +4,13 @@ from .frontend import (CoeffHandle, ExprHandle, FieldHandle, ProgramBuilder,
                        absolute, exp, log, maximum, minimum, sign, sqrt,
                        tanh, where)
 from .boundary import BOUNDARIES
-from .dataflow import StreamGraph, StreamRegion, lower_to_dataflow
+from .dataflow import (StreamGraph, StreamRegion, chain_split_reason,
+                       effective_time_tile, lower_to_dataflow)
 from .ir import Program
-from .pipeline import CompiledStencil, compile_program, run_time_loop
+from .pipeline import (CompiledStencil, CompileOptions, compile_program,
+                       run_time_loop)
 from .schedule import (DataflowPlan, ShardSpec, StreamSpec, TimeLoopSpec,
-                       auto_plan, make_shard_spec, plan_from_dict,
-                       plan_time_loop, plan_to_dict, program_fingerprint,
-                       shard_local_grid)
+                       adapt_update, auto_plan, make_shard_spec,
+                       plan_from_dict, plan_time_loop, plan_to_dict,
+                       program_fingerprint, shard_local_grid)
 from .tune import PlanCache, TuneConfig, TuneResult, get_tuned_plan, tune_plan

@@ -39,6 +39,22 @@ streaming cannot honour a dependency in one sweep:
 Split intermediates are materialised in HBM between regions, exactly like
 the paper's inter-stage streams; external inputs never force a split (the
 orchestrator pads them — zero slabs or torus wraparound — before the sweep).
+
+**Temporal blocking** (``plan.time_tile = T > 1``, the paper's chained
+timestep compute regions / the wafer-scale follow-up's pipelined time
+steps): one sweep advances T time steps by chaining T copies of the
+region's compute stage inside the kernel, with the fused-loop update rule
+applied plane-wise between stages.  Chain stage ``s+1`` trails stage ``s``
+by the region's stream lead, so halo margins and window-buffer depths
+accumulate per chained step (:func:`chained_halo`), and each input plane is
+fetched from HBM once per T steps.  The chain legalises like regions do —
+:func:`chain_split_reason` demotes the *effective* tile (carried on
+``StreamSpec.time_tile``) to 1 wherever one sweep cannot honour the chain:
+multi-region programs (step intermediates materialise in HBM between
+sweeps), periodic persistent fields (the updated field's wraparound planes
+are not resident mid-sweep — the same rule that splits periodic temp
+back-references), or regions that do not see every persistent field (the
+update rule consumes them all).
 """
 
 from __future__ import annotations
@@ -120,11 +136,17 @@ class StreamRegion:
 
 @dataclasses.dataclass
 class StreamGraph:
-    """The full dataflow program: ordered regions over one stream axis."""
+    """The full dataflow program: ordered regions over one stream axis.
+
+    ``time_tile`` is the *effective* temporal-blocking depth: the number of
+    chained timestep stages one sweep advances (1 = no chaining, either
+    because none was requested or because :func:`chain_split_reason` split
+    the chain back to single steps)."""
 
     program: str
     axis: int
     regions: list
+    time_tile: int = 1
 
     def spec(self) -> StreamSpec:
         """The plan-resident summary (what the tuner's cache round-trips)."""
@@ -134,11 +156,20 @@ class StreamGraph:
             depths=tuple(dict(r.depths) for r in self.regions),
             rings=tuple(dict(r.rings) for r in self.regions),
             leads=tuple(r.lead for r in self.regions),
+            time_tile=self.time_tile,
         )
+
+    def group_halos(self) -> list:
+        """One :class:`~repro.core.passes.GroupHalo` per *lowered kernel*:
+        the region halos, chain-accumulated when this graph temporal-blocks
+        (carry/shard sizing must cover what the chained kernels slice)."""
+        return [chained_halo(r.halo, self.time_tile) for r in self.regions]
 
     def to_text(self) -> str:
         """HLS-dialect-style dump (docs, debugging, golden tests)."""
-        lines = [f"dataflow.graph @{self.program} stream_axis={self.axis} {{"]
+        tt = f" time_tile={self.time_tile}" if self.time_tile > 1 else ""
+        lines = [f"dataflow.graph @{self.program} "
+                 f"stream_axis={self.axis}{tt} {{"]
         for ri, r in enumerate(self.regions):
             lines.append(f"  dataflow.region @{ri} lead={r.lead} {{")
             for n in r.nodes:
@@ -203,6 +234,79 @@ def legalize_stream_groups(p: Program, groups: Sequence) -> list:
         if cur:
             out.append(cur)
     return out
+
+
+# --------------------------------------------------------------------------
+# Temporal-blocking (time_tile) chain legalisation
+# --------------------------------------------------------------------------
+
+
+def chain_split_reason(p: Program, regions: Sequence) -> str | None:
+    """Why T > 1 timestep stages cannot chain through one sweep (None = they
+    can).  The rules mirror region legalisation, applied at the step level:
+
+    * **multiple regions** — step intermediates materialise in HBM between
+      region sweeps, so the chain would break mid-step;
+    * **periodic persistent field** — stage ``s+1`` reads the *updated*
+      field, whose wraparound planes are produced in-sweep and are not
+      resident (the periodic-temp back-reference rule, one level up);
+    * **region inputs != persistent fields** — the update rule consumes
+      every persistent field, so each chained stage must have all of them
+      resident as planes.
+    """
+    if len(regions) != 1:
+        return (f"program streams as {len(regions)} regions; chained steps "
+                "would need inter-region intermediates resident mid-sweep")
+    persistent = p.input_fields()
+    for f in persistent:
+        if p.fields[f].boundary == "periodic":
+            return (f"persistent field {f!r} is periodic: the updated "
+                    "field's wraparound planes are not resident mid-sweep")
+    region = regions[0]
+    inputs = {a.field for i in region for a in p.ops[i].accesses()
+              if a.field not in {p.ops[j].out for j in region}}
+    if not inputs <= set(persistent):
+        return ("region reads non-persistent inputs "
+                f"{sorted(inputs - set(persistent))}")
+    if set(persistent) - inputs:
+        # the update rule needs planes of every persistent field; fields
+        # the stencil never reads have no window to chain through
+        return ("persistent field(s) "
+                f"{sorted(set(persistent) - inputs)} not read by the "
+                "region; chained stages would lack their planes")
+    return None
+
+
+def effective_time_tile(p: Program, regions: Sequence, requested: int) -> int:
+    """The chain depth one sweep can actually honour: the requested
+    ``time_tile`` when :func:`chain_split_reason` allows it, else 1."""
+    requested = max(1, int(requested))
+    if requested == 1:
+        return 1
+    return 1 if chain_split_reason(p, regions) is not None else requested
+
+
+def chained_halo(gh: GroupHalo, time_tile: int) -> GroupHalo:
+    """Input-halo reach of a T-chained region (paper: margins accumulate
+    per chained step).
+
+    Stage ``s+1`` trails stage ``s`` by the region ``lead`` along the
+    stream axis, so the sweep front runs ``T x lead`` planes ahead of the
+    final output plane while the lo-side reach stays one window deep.  On
+    the non-stream axes every chained stage widens the working extent by
+    one full halo step, so external inputs must arrive padded by ``T x``
+    the single-step halo on both sides.  ``margins`` are kept per-stage by
+    the lowering; carry/shard sizing only consumes ``input_halo``."""
+    T = max(1, int(time_tile))
+    if T == 1:
+        return gh
+    halo = np.array(gh.input_halo)
+    halo[0, 1] *= T              # stream front: lead accumulates per stage
+    halo[1:, :] *= T             # non-stream: one halo step per stage
+    return GroupHalo(margins=gh.margins, input_halo=halo,
+                     group_inputs=gh.group_inputs,
+                     group_outputs=gh.group_outputs,
+                     internal=gh.internal, group_coeffs=gh.group_coeffs)
 
 
 # --------------------------------------------------------------------------
@@ -387,4 +491,7 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None
         grid = tuple(int(g) for g in grid)
         if len(grid) != p.ndim:
             raise ValueError(f"grid rank {len(grid)} != ndim {p.ndim}")
-    return StreamGraph(program=p.name, axis=STREAM_AXIS, regions=regions)
+    eff = effective_time_tile(p, region_ops,
+                              getattr(plan, "time_tile", 1))
+    return StreamGraph(program=p.name, axis=STREAM_AXIS, regions=regions,
+                       time_tile=eff)

@@ -553,10 +553,10 @@ def make_sharded_executor(p: Program, global_grid, mesh: Mesh,
         "make_sharded_executor is deprecated; call "
         "compile_program(p, grid, mesh=..., mesh_axes=...) instead",
         DeprecationWarning, stacklevel=2)
-    from .pipeline import compile_program
-    ex = compile_program(p, global_grid, backend=backend, plan=plan,
-                         interpret=interpret, dtype=dtype,
-                         mesh=mesh, mesh_axes=mesh_axes)
+    from .pipeline import CompileOptions, compile_program
+    ex = compile_program(p, global_grid, options=CompileOptions(
+        backend=backend, plan=plan, interpret=interpret, dtype=dtype,
+        mesh=mesh, mesh_axes=mesh_axes))
     ex.local_grid = ex.shard.local_grid
     ex.mesh_axes = ex.shard.mesh_axes
     ex.field_spec = P(*ex.shard.mesh_axes)

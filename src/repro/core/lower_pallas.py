@@ -127,14 +127,31 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
 
 
 def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
-                         update, calls):
+                         update, calls, chain: int = 1, epilogue=None):
     """Fused-loop orchestrator over prebuilt kernel calls (shared with the
-    stream schedule, whose carries have no alignment slab)."""
+    stream schedule, whose carries have no alignment slab).
+
+    ``chain`` is how many time steps one pass over ``calls`` advances: 1
+    for plain kernels (stencil outputs + one update here, per iteration),
+    T for a temporally-blocked stream chain, which applies all T updates
+    in-kernel and *returns the new fields* (``call.returns_fields``) — the
+    loop body then only writes them back into the carry.  The loop runs
+    ``spec.steps // chain`` iterations, and ``epilogue`` — a second call
+    list advancing ``spec.steps % chain`` steps — runs once after it,
+    slicing its (shallower) windows out of the same carry via
+    ``input_pad``.
+    """
     update = adapt_update(update)
     ndim = p.ndim
     fpad = spec.field_pad
     bnd = p.boundaries()
     align = spec.align_hi or (0,) * ndim
+    chain = max(1, int(chain))
+    outer = int(spec.steps) // chain
+    if int(spec.steps) % chain and epilogue is None and chain > 1:
+        raise ValueError(
+            f"steps={spec.steps} is not a multiple of the chain depth "
+            f"{chain} and no remainder epilogue was provided")
     interior = {f: tuple(slice(int(fpad[f][a, 0]),
                                int(fpad[f][a, 0]) + grid_shape[a])
                          for a in range(ndim))
@@ -156,21 +173,31 @@ def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
         # coefficients never change across steps: pad per consuming group
         # once, before the loop ("small data" stays resident)
         pc_per_call = _pad_coeffs(p, calls, coeffs, dtype)
+        pc_epilogue = (_pad_coeffs(p, epilogue, coeffs, dtype)
+                       if epilogue is not None else None)
         # pad the persistent carry buffers exactly once
         carry = {f: refill(f, jnp.asarray(fields[f], dtype=dtype))
                  for f in spec.persistent}
 
-        def body(_, carry):
+        def advance(carry, calls_, pc_):
             def resolve(call, f, env):
                 if f in carry:              # persistent: window from carry
                     return carry[f], fpad[f]
                 return bc.pad_field(env[f], call.halo_lo, call.halo_hi,
                                     bnd[f], align_hi=call.align_hi), None
 
-            outputs = _run_groups(p, calls, svec, pc_per_call, resolve)
-            cur = {f: carry[f][interior[f]] for f in spec.persistent}
-            new = dict(cur)
-            new.update(update(cur, outputs, scalars))
+            if getattr(calls_[0], "returns_fields", False):
+                # temporally-blocked chain: one call advances every field
+                # by its full chain depth, updates included
+                call = calls_[0]
+                padded = {f: carry[f] for f in call.group_inputs}
+                new = call(padded, svec, pc_[0],
+                           input_pad={f: fpad[f] for f in call.group_inputs})
+            else:
+                outputs = _run_groups(p, calls_, svec, pc_, resolve)
+                cur = {f: carry[f][interior[f]] for f in spec.persistent}
+                new = dict(cur)
+                new.update(update(cur, outputs, scalars))
             out = {}
             for f in spec.persistent:
                 if spec.carry_write == "inplace" and bnd[f] == "zero":
@@ -183,7 +210,12 @@ def time_loop_from_calls(p: Program, dtype, grid_shape, spec: TimeLoopSpec,
                     out[f] = refill(f, jnp.asarray(new[f], dtype=dtype))
             return out
 
-        carry = jax.lax.fori_loop(0, spec.steps, body, carry)
+        def body(_, carry):
+            return advance(carry, calls, pc_per_call)
+
+        carry = jax.lax.fori_loop(0, outer, body, carry)
+        if epilogue is not None and int(spec.steps) % chain:
+            carry = advance(carry, epilogue, pc_epilogue)
         return {f: carry[f][interior[f]] for f in spec.persistent}
 
     return run

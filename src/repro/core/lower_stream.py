@@ -46,51 +46,86 @@ from .dataflow import StreamGraph, StreamRegion, lower_to_dataflow
 from .expr_eval import evaluate
 from .ir import Access, Program
 from .lower_pallas import _DTYPES, lower_from_calls, time_loop_from_calls
-from .schedule import DataflowPlan, TimeLoopSpec
+from .schedule import DataflowPlan, TimeLoopSpec, adapt_update
 
 
 def build_stream_call(p: Program, region: StreamRegion, grid_shape,
                       dtype=jnp.float32, interpret: bool = True,
-                      global_extent=None):
+                      global_extent=None, time_tile: int = 1, update=None):
     """Build a callable(padded_inputs, scalars, coeffs, origin) -> outputs
     streaming one region over the outer axis (see module docstring).
 
     ``padded_inputs`` must be padded by ``pad_lo``/``pad_hi`` (exposed on
     the returned callable); oversized persistent buffers ride in via the
     ``input_pad`` path exactly as for block kernels.
+
+    With ``update`` (the already-normalised fused-loop rule) the kernel
+    chains ``time_tile = T`` timestep *stages* per sweep step and returns
+    the **updated persistent fields after T steps** instead of the stencil
+    outputs: stage ``s`` completes interior plane ``c_s = t - lo -
+    (s+1)*lead`` at sweep step ``t`` (each stage trails the previous by the
+    region's stream lead), the update rule is applied plane-wise after
+    every stage, and each later stage reads the *updated* fields out of
+    per-stage VMEM rings instead of HBM — one plane fetched from HBM per T
+    time steps.  Non-stream margins accumulate one halo step per remaining
+    stage, so inputs arrive padded T-fold and stage extents shrink back to
+    the grid by stage T-1, whose updated planes are stored.  The chain
+    assumes an *element-wise* update rule (the fused-loop contract): it is
+    applied per plane at each stage's working extent.
     """
     ndim = p.ndim
     gh = region.halo
+    T = max(1, int(time_tile))
+    if T > 1 and update is None:
+        raise ValueError("time_tile > 1 chains timestep stages in-kernel "
+                         "and needs the fused-loop update rule")
     grid_shape = tuple(int(g) for g in grid_shape)
     if global_extent is None:
         global_extent = grid_shape
     global_extent = tuple(int(g) for g in global_extent)
     n0 = grid_shape[0]
-    halo_lo = tuple(int(gh.input_halo[a, 0]) for a in range(ndim))
-    halo_hi = tuple(int(gh.input_halo[a, 1]) for a in range(ndim))
-    lead = halo_hi[0]
-    span = halo_lo[0] + lead          # window depth along the stream - 1
+    # per-step region halo (hl/hh) vs the T-chained outer padding (halo_lo/
+    # halo_hi = what the caller pads: stream (lo, T*lead), non-stream T-fold)
+    hl = tuple(int(gh.input_halo[a, 0]) for a in range(ndim))
+    hh = tuple(int(gh.input_halo[a, 1]) for a in range(ndim))
+    lead = hh[0]
+    halo_lo = (hl[0],) + tuple(T * hl[a] for a in range(1, ndim))
+    halo_hi = (T * lead,) + tuple(T * hh[a] for a in range(1, ndim))
+    span = halo_lo[0] + halo_hi[0]    # stream reach of the whole chain
     n_steps = n0 + span               # padded planes = one grid step each
     # padded plane extents on the non-stream axes (group-uniform halo)
     plane_ext = tuple(grid_shape[a] + halo_lo[a] + halo_hi[a]
                       for a in range(1, ndim))
+    # margin every remaining chain stage adds on the non-stream axes
+    stage_add = np.zeros((ndim, 2), dtype=np.int64)
+    for a in range(1, ndim):
+        stage_add[a] = (hl[a], hh[a])
 
     ops = [p.ops[i] for i in region.ops]
     margins = {p.ops[i].out: gh.margins[i] for i in region.ops}
     produced = {op.out for op in ops}
     out_names = [op.out for op in ops if op.out in set(gh.group_outputs)]
+    # with an update rule the sweep advances time in-kernel and the stored
+    # arrays are the updated persistent fields, not the stencil outputs
+    store_names = list(gh.group_inputs) if update is not None else out_names
     coeff_axis = {c: p.coeffs[c] for c in gh.group_coeffs}
     depths = {f: int(region.depths[f]) for f in gh.group_inputs}
     ring_depth = {t: int(r) for t, r in region.rings.items()}
     ring_names = [op.out for op in ops if op.out in ring_depth]
     n_scalars = len(p.scalars)
     scalar_index = {s: i for i, s in enumerate(p.scalars)}
-    # non-stream margin recompute needs the zero-halo mask unless the field
-    # is periodic (wrapped planes are exact); the stream axis itself is
-    # handled by input padding + ring-store masking, never here
-    masked = {op.out: (margins[op.out][1:].any()
-                       and p.fields[op.out].boundary != "periodic")
-              for op in ops}
+    # stage s evaluates every op at its base margin plus (T-1-s) accumulated
+    # halo steps (chained stages shrink back toward the grid); masking of a
+    # stage's results follows the *stage* margins — non-stream recompute
+    # needs the zero-halo mask unless the field is periodic (wrapped planes
+    # are exact); the stream axis itself is handled by input padding + ring-
+    # store masking, never here
+    stage_margins = [{out: m + (T - 1 - s) * stage_add
+                      for out, m in margins.items()} for s in range(T)]
+    # per-(stage, field) ring-plane extents: stage s reads updated fields
+    # padded by (T-s) halo steps, exactly what stage s-1's update produced
+    ring_plane_ext = [tuple(grid_shape[a] + (T - s) * (hl[a] + hh[a])
+                            for a in range(1, ndim)) for s in range(T)]
 
     def plane_slices(src_lo, m, offset):
         """Non-stream-axes slice of a resident plane padded by ``src_lo``,
@@ -110,108 +145,204 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
         i += len(gh.group_inputs)
         coeff_refs = {c: refs[i + k] for k, c in enumerate(gh.group_coeffs)}
         i += len(gh.group_coeffs)
-        out_refs = {f: refs[i + k] for k, f in enumerate(out_names)}
-        i += len(out_names)
+        out_refs = {f: refs[i + k] for k, f in enumerate(store_names)}
+        i += len(store_names)
         buf_refs = {f: refs[i + k] for k, f in enumerate(gh.group_inputs)}
         i += len(gh.group_inputs)
-        ring_refs = {t: refs[i + k] for k, t in enumerate(ring_names)}
+        # per-stage rings of the *updated* persistent fields (stages 1..T-1)
+        field_refs = [None]
+        for _ in range(1, T):
+            field_refs.append({f: refs[i + k]
+                               for k, f in enumerate(gh.group_inputs)})
+            i += len(gh.group_inputs)
+        # per-stage temp rings (each chain stage recomputes its own temps)
+        stage_ring_refs = []
+        for _ in range(T):
+            stage_ring_refs.append({t: refs[i + k]
+                                    for k, t in enumerate(ring_names)})
+            i += len(ring_names)
 
-        s = pl.program_id(0)
+        t_step = pl.program_id(0)
 
-        @pl.when(s == 0)
+        @pl.when(t_step == 0)
         def _init():                    # fresh sweep: clear the carry
-            for r in list(buf_refs.values()) + list(ring_refs.values()):
+            carried = list(buf_refs.values())
+            for s in range(1, T):
+                carried += list(field_refs[s].values())
+            for s in range(T):
+                carried += list(stage_ring_refs[s].values())
+            for r in carried:
                 r[...] = jnp.zeros_like(r)
 
         # shift every window buffer one plane and append the new plane
-        # (the single per-step HBM fetch)
+        # (the single per-T-steps HBM fetch)
         windows = {}
         for f in gh.group_inputs:
             v = jnp.concatenate([buf_refs[f][...][1:], in_refs[f][...]],
                                 axis=0)
             buf_refs[f][...] = v
             windows[f] = v
-        ring_vals = {t: ring_refs[t][...] for t in ring_names}
+        field_vals = [None] + [{f: field_refs[s][f][...]
+                                for f in gh.group_inputs}
+                               for s in range(1, T)]
         coeff_windows = {c: r[...] for c, r in coeff_refs.items()}
-
-        # the output plane this step completes (negative during warm-up;
-        # the out index map clamps, and ring stores mask by validity)
-        c_plane = s - span
-        results: dict = {}
-        memo: dict = {}
 
         def scalar(name: str):
             return s_ref[scalar_index[name]]
 
-        for op in ops:
-            m = margins[op.out]
-            ext = tuple(grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
-                        for ax in range(1, ndim))
+        sdict = {nm: s_ref[scalar_index[nm]] for nm in p.scalars}
 
-            def coeff(cr, m=m):
-                ax = coeff_axis[cr.coeff]
-                cvec = coeff_windows[cr.coeff]
-                if ax == 0:
-                    # per-plane scalar, read at the (clamped) global plane
-                    idx = jnp.clip(s - lead + cr.offset, 0,
-                                   cvec.shape[0] - 1)
-                    v = jax.lax.dynamic_slice(cvec, (idx,), (1,))
-                    return v.reshape((1,) * (ndim - 1))
-                start = int(halo_lo[ax] - m[ax, 0] + cr.offset)
-                size = grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
-                v = cvec[start:start + size]
-                shape = [1] * (ndim - 1)
-                shape[ax - 1] = size
-                return v.reshape(shape)
+        for s in range(T):
+            acc = T - 1 - s
+            margins_s = stage_margins[s]
+            # the interior plane stage s completes this step (negative
+            # during warm-up; the out index map clamps, and every ring
+            # store masks by stream validity)
+            c_plane = t_step - hl[0] - (s + 1) * lead
+            ring_refs = stage_ring_refs[s]
+            ring_vals = {t: ring_refs[t][...] for t in ring_names}
+            results: dict = {}
+            memo: dict = {}
 
-            def access(a: Access, m=m):
-                o0 = int(a.offset[0])
-                if a.field in produced:
-                    pm = margins[a.field]
-                    if a.field in ring_refs:
-                        # past (or current) plane out of the temp's ring
-                        plane = ring_vals[a.field][
-                            ring_depth[a.field] - 1 + o0]
+            for op in ops:
+                m = margins_s[op.out]
+                ext = tuple(grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
+                            for ax in range(1, ndim))
+
+                def coeff(cr, m=m, s=s):
+                    ax = coeff_axis[cr.coeff]
+                    cvec = coeff_windows[cr.coeff]
+                    if ax == 0:
+                        # per-plane scalar, read at the (clamped) global
+                        # plane stage s is completing
+                        idx = jnp.clip(t_step - (s + 1) * lead + cr.offset,
+                                       0, cvec.shape[0] - 1)
+                        v = jax.lax.dynamic_slice(cvec, (idx,), (1,))
+                        return v.reshape((1,) * (ndim - 1))
+                    start = int(halo_lo[ax] - m[ax, 0] + cr.offset)
+                    size = grid_shape[ax] + int(m[ax, 0]) + int(m[ax, 1])
+                    v = cvec[start:start + size]
+                    shape = [1] * (ndim - 1)
+                    shape[ax - 1] = size
+                    return v.reshape(shape)
+
+                def access(a: Access, m=m, s=s, margins_s=margins_s,
+                           ring_vals=ring_vals, results=results):
+                    o0 = int(a.offset[0])
+                    if a.field in produced:
+                        pm = margins_s[a.field]
+                        if a.field in ring_depth:
+                            # past (or current) plane out of the temp's ring
+                            plane = ring_vals[a.field][
+                                ring_depth[a.field] - 1 + o0]
+                        else:
+                            plane = results[a.field]    # this step's value
+                        return plane[plane_slices(pm[:, 0], m, a.offset)]
+                    # persistent field: stage 0 reads the shift register
+                    # (raw HBM planes), later stages the previous stage's
+                    # updated-field ring — same index, one window behind
+                    # the stream front
+                    idx = depths[a.field] - 1 - lead + o0
+                    if s == 0:
+                        plane = windows[a.field][idx]
+                        src_lo = halo_lo
                     else:
-                        plane = results[a.field]        # this step's value
-                    return plane[plane_slices(pm[:, 0], m, a.offset)]
-                # external input: resident plane of the shift register
-                plane = windows[a.field][depths[a.field] - 1 - lead + o0]
-                return plane[plane_slices(halo_lo, m, a.offset)]
+                        plane = field_vals[s][a.field][idx]
+                        src_lo = tuple((T - s) * hl[ax]
+                                       for ax in range(ndim))
+                    return plane[plane_slices(src_lo, m, a.offset)]
 
-            mkey = tuple(int(v) for v in m.flatten())
-            op_memo = memo.setdefault(mkey, {})
-            res = evaluate(op.expr, access, scalar, op_memo, coeff=coeff)
-            res = jnp.broadcast_to(jnp.asarray(res, dtype=dtype), ext)
-            if masked[op.out]:
-                mask = None
-                for ax in range(1, ndim):
-                    if not m[ax].any():
-                        continue
-                    g0 = org_ref[ax] - int(m[ax, 0])
-                    coord = g0 + jax.lax.broadcasted_iota(jnp.int32, ext,
-                                                          ax - 1)
-                    ok = (coord >= 0) & (coord < global_extent[ax])
-                    mask = ok if mask is None else (mask & ok)
-                if mask is not None:
-                    res = jnp.where(mask, res, jnp.asarray(0, dtype=dtype))
-            results[op.out] = res
-            if op.out in ring_refs:
-                # ring planes must honour zero-halo semantics along the
-                # stream axis: out-of-domain planes store as zeros (periodic
-                # temps with back-references were legalised into splits)
-                cg = org_ref[0] + c_plane
-                ok = (cg >= 0) & (cg < global_extent[0])
-                stored = jnp.where(ok, res, jnp.zeros_like(res))
-                v = jnp.concatenate([ring_vals[op.out][1:], stored[None]],
-                                    axis=0)
-                ring_refs[op.out][...] = v
-                ring_vals[op.out] = v
-            if op.out in out_refs:
-                center = tuple(slice(int(m[ax, 0]),
-                                     int(m[ax, 0]) + grid_shape[ax])
-                               for ax in range(1, ndim))
-                out_refs[op.out][...] = res[center][None]
+                mkey = tuple(int(v) for v in m.flatten())
+                op_memo = memo.setdefault(mkey, {})
+                res = evaluate(op.expr, access, scalar, op_memo, coeff=coeff)
+                res = jnp.broadcast_to(jnp.asarray(res, dtype=dtype), ext)
+                if m[1:].any() and p.fields[op.out].boundary != "periodic":
+                    mask = None
+                    for ax in range(1, ndim):
+                        if not m[ax].any():
+                            continue
+                        g0 = org_ref[ax] - int(m[ax, 0])
+                        coord = g0 + jax.lax.broadcasted_iota(jnp.int32, ext,
+                                                              ax - 1)
+                        ok = (coord >= 0) & (coord < global_extent[ax])
+                        mask = ok if mask is None else (mask & ok)
+                    if mask is not None:
+                        res = jnp.where(mask, res,
+                                        jnp.asarray(0, dtype=dtype))
+                results[op.out] = res
+                if op.out in ring_refs:
+                    # ring planes must honour zero-halo semantics along the
+                    # stream axis: out-of-domain planes store as zeros
+                    # (periodic temps with back-references were legalised
+                    # into splits)
+                    cg = org_ref[0] + c_plane
+                    ok = (cg >= 0) & (cg < global_extent[0])
+                    stored = jnp.where(ok, res, jnp.zeros_like(res))
+                    v = jnp.concatenate([ring_vals[op.out][1:],
+                                         stored[None]], axis=0)
+                    ring_refs[op.out][...] = v
+                    ring_vals[op.out] = v
+                if update is None and op.out in out_refs:
+                    center = tuple(slice(int(m[ax, 0]),
+                                         int(m[ax, 0]) + grid_shape[ax])
+                                   for ax in range(1, ndim))
+                    out_refs[op.out][...] = res[center][None]
+
+            if update is None:
+                break                   # classic sweep: T == 1, no chaining
+            # advance time: apply the fused-loop update rule plane-wise at
+            # this stage's working extent.  Mid-chain the updated planes
+            # feed stage s+1's rings (the next stage reads time level s+1
+            # without touching HBM); at stage T-1 they are the stored
+            # result — the fields after T steps.
+            ext_s = tuple(grid_shape[a] + acc * (hl[a] + hh[a])
+                          for a in range(1, ndim))
+            cur = {}
+            for f in gh.group_inputs:
+                idx = depths[f] - 1 - lead
+                plane = (windows[f][idx] if s == 0
+                         else field_vals[s][f][idx])
+                # "in by one halo step": the source planes carry exactly one
+                # more accumulated halo than this stage's extent
+                cur[f] = plane[tuple(slice(hl[ax], hl[ax] + ext_s[ax - 1])
+                                     for ax in range(1, ndim))]
+            outs = {}
+            for f in out_names:
+                m = margins[f]          # base margin; stage adds acc steps
+                outs[f] = results[f][tuple(
+                    slice(int(m[ax, 0]), int(m[ax, 0]) + ext_s[ax - 1])
+                    for ax in range(1, ndim))]
+            merged = dict(cur)
+            merged.update(update(cur, outs, sdict))
+            if s == T - 1:
+                for f in gh.group_inputs:
+                    v = jnp.broadcast_to(
+                        jnp.asarray(merged[f], dtype=dtype), ext_s)
+                    out_refs[f][...] = v[None]
+                break
+            # re-impose zero-boundary semantics on the updated planes: the
+            # rings stand in for the outer loop's re-padded carry, so out-
+            # of-domain cells (non-stream margins and warm-up/out-of-sweep
+            # planes) must store as zeros
+            cg = org_ref[0] + c_plane
+            ok = (cg >= 0) & (cg < global_extent[0])
+            mask = jnp.broadcast_to(ok, ext_s)
+            for ax in range(1, ndim):
+                if acc * (hl[ax] + hh[ax]) == 0 and grid_shape[ax] == \
+                        global_extent[ax]:
+                    continue
+                g0 = org_ref[ax] - acc * hl[ax]
+                coord = g0 + jax.lax.broadcasted_iota(jnp.int32, ext_s,
+                                                      ax - 1)
+                mask = mask & (coord >= 0) & (coord < global_extent[ax])
+            for f in gh.group_inputs:
+                v = jnp.broadcast_to(jnp.asarray(merged[f], dtype=dtype),
+                                     ext_s)
+                stored = jnp.where(mask, v, jnp.asarray(0, dtype=dtype))
+                nxt = jnp.concatenate([field_vals[s + 1][f][1:],
+                                       stored[None]], axis=0)
+                field_refs[s + 1][f][...] = nxt
+                field_vals[s + 1][f] = nxt
 
     zeros_tail = (0,) * (ndim - 1)
     in_specs = [pl.BlockSpec(memory_space=pltpu.SMEM),   # scalars
@@ -228,24 +359,29 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
     out_specs = tuple(
         pl.BlockSpec(out_block,
                      lambda s: (jnp.maximum(s - span, 0),) + zeros_tail)
-        for _ in out_names)
+        for _ in store_names)
     out_shape = tuple(jax.ShapeDtypeStruct(grid_shape, dtype)
-                      for _ in out_names)
+                      for _ in store_names)
 
     scratch = [pltpu.VMEM((depths[f],) + plane_ext, dtype)
                for f in gh.group_inputs]
-    for t in ring_names:
-        pm = margins[t]
-        ext_t = tuple(grid_shape[a] + int(pm[a, 0]) + int(pm[a, 1])
-                      for a in range(1, ndim))
-        scratch.append(pltpu.VMEM((ring_depth[t],) + ext_t, dtype))
+    for s in range(1, T):
+        for f in gh.group_inputs:
+            scratch.append(pltpu.VMEM((depths[f],) + ring_plane_ext[s],
+                                      dtype))
+    for s in range(T):
+        for t in ring_names:
+            pm = stage_margins[s][t]
+            ext_t = tuple(grid_shape[a] + int(pm[a, 0]) + int(pm[a, 1])
+                          for a in range(1, ndim))
+            scratch.append(pltpu.VMEM((ring_depth[t],) + ext_t, dtype))
 
     call = pl.pallas_call(
         kernel,
         grid=(n_steps,),
         in_specs=in_specs,
-        out_specs=out_specs if len(out_names) > 1 else out_specs[0],
-        out_shape=out_shape if len(out_names) > 1 else out_shape[0],
+        out_specs=out_specs if len(store_names) > 1 else out_specs[0],
+        out_shape=out_shape if len(store_names) > 1 else out_shape[0],
         scratch_shapes=scratch,
         interpret=interpret,
     )
@@ -277,13 +413,14 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
         for c in gh.group_coeffs:
             args.append(padded_coeffs[c])
         res = call(*args)
-        if len(out_names) == 1:
+        if len(store_names) == 1:
             res = (res,)
-        return dict(zip(out_names, res))
+        return dict(zip(store_names, res))
 
     # geometry for the shared orchestrators (identical to build_group_call)
     run.group_inputs = gh.group_inputs
-    run.group_outputs = out_names
+    run.group_outputs = store_names
+    run.returns_fields = update is not None
     run.group_coeffs = gh.group_coeffs
     run.coeff_axis = coeff_axis
     run.block = (1,) + grid_shape[1:]
@@ -297,6 +434,7 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
     run.stream_axis = 0
     run.depths = depths
     run.rings = dict(ring_depth)
+    run.chain = T           # chained stages: T-1 in-kernel updates per sweep
     run.vmem_window_bytes = sum(
         depths[f] * int(np.prod(plane_ext)) for f in gh.group_inputs
     ) * np.dtype(np.float32 if dtype == jnp.float32 else np.float16).itemsize
@@ -316,7 +454,10 @@ def _build_calls(p: Program, plan: DataflowPlan, grid_shape,
 
 def lower(p: Program, plan: DataflowPlan, grid_shape,
           graph: StreamGraph | None = None):
-    """Return fn(fields, scalars, coeffs) -> outputs, one streamed sweep."""
+    """Return fn(fields, scalars, coeffs) -> outputs, one streamed sweep.
+
+    Single-step execution never chains (there is no update rule to apply
+    between stages), so any ``time_tile`` on the plan is ignored here."""
     dtype, calls = _build_calls(p, plan, grid_shape, graph)
     return lower_from_calls(p, dtype, calls)
 
@@ -327,6 +468,33 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
     """Fused ``lax.fori_loop`` time loop over streamed sweeps: the carry
     holds pre-padded persistent fields (no alignment slab — streams never
     tile), each step runs every region's shift-register sweep, and the
-    update rule is traced once."""
-    dtype, calls = _build_calls(p, plan, grid_shape, graph)
-    return time_loop_from_calls(p, dtype, grid_shape, spec, update, calls)
+    update rule is traced once.
+
+    With an effective ``time_tile = T > 1`` on the graph, each loop
+    iteration runs ONE chained sweep that advances T full steps (all T
+    updates applied in-kernel between chain stages; the call returns the
+    new fields and the loop body just writes them back into the carry), so
+    the loop runs ``spec.steps // T`` iterations; a ``spec.steps % T``
+    remainder runs once after the loop through a second, shallower chain
+    built from the same region."""
+    dtype = _DTYPES[plan.dtype]
+    if graph is None:
+        graph = lower_to_dataflow(p, plan, grid_shape)
+    T = int(getattr(graph, "time_tile", 1))
+    if T <= 1:
+        _, calls = _build_calls(p, plan, grid_shape, graph)
+        return time_loop_from_calls(p, dtype, grid_shape, spec, update,
+                                    calls)
+    region = graph.regions[0]       # chain legality implies a single region
+    upd = adapt_update(update)
+    calls = [build_stream_call(p, region, grid_shape, dtype=dtype,
+                               interpret=plan.interpret, time_tile=T,
+                               update=upd)]
+    rem = int(spec.steps) % T
+    epilogue = None
+    if rem:
+        epilogue = [build_stream_call(
+            p, region, grid_shape, dtype=dtype, interpret=plan.interpret,
+            time_tile=rem, update=upd)]
+    return time_loop_from_calls(p, dtype, grid_shape, spec, update, calls,
+                                chain=T, epilogue=epilogue)

@@ -29,6 +29,84 @@ from .schedule import (DataflowPlan, ShardSpec, TimeLoopSpec, auto_plan,
 _BACKENDS = ("pallas", "jnp_fused", "jnp_naive")
 
 
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Every compile-time knob of :func:`compile_program`, as one frozen
+    value object — the canonical way to configure a compile:
+
+        ex = compile_program(p, grid, options=CompileOptions(
+                 schedule="stream", steps=16, update=rule, time_tile=4))
+
+    Loose keyword arguments remain accepted (``compile_program(p, grid,
+    steps=16, ...)``) and are normalised into a ``CompileOptions``
+    internally, so both spellings hit the same validation; passing a knob
+    *both* ways with different values is an error, never a silent pick.
+    Being frozen, an options value can be shared between compiles (the
+    serving engine, the tuner, benchmarks) without copy-on-write concerns.
+
+    ``time_tile`` is the temporal-blocking depth: pipeline that many time
+    steps through one stream sweep (requires ``schedule="stream"`` and a
+    fused loop, i.e. ``steps``/``update``).  ``None`` defers to the plan
+    (heuristic and tuned plans carry their own depth); an integer forces
+    the requested depth, which stream legalisation may still demote to 1
+    (see ``StreamSpec.time_tile``).
+    """
+
+    backend: str = "pallas"
+    plan: DataflowPlan | None = None
+    jit: bool = True
+    interpret: bool = True
+    dtype: str = "float32"
+    strategy: str = "auto"
+    steps: int | None = None
+    update: object = None
+    carry_write: str | None = None
+    tune_config: object = None
+    plan_cache: object = None
+    mesh: object = None
+    mesh_axes: tuple | None = None
+    boundary: object = None
+    schedule: str | None = None
+    time_tile: int | None = None
+
+
+_OPTION_DEFAULTS = {f.name: f.default
+                    for f in dataclasses.fields(CompileOptions)}
+
+
+def _resolve_options(options, kwargs) -> CompileOptions:
+    """Merge the ``options=`` object and loose kwargs into one validated
+    :class:`CompileOptions` (the single normalisation point)."""
+    unknown = set(kwargs) - set(_OPTION_DEFAULTS)
+    if unknown:
+        raise TypeError(
+            "unknown compile option(s) "
+            + ", ".join(sorted(repr(k) for k in unknown))
+            + "; valid options: "
+            + ", ".join(sorted(_OPTION_DEFAULTS)))
+    if options is None:
+        return CompileOptions(**kwargs)
+    if not isinstance(options, CompileOptions):
+        raise TypeError(
+            f"options= must be a CompileOptions, got "
+            f"{type(options).__name__}")
+    if not kwargs:
+        return options
+    for k, v in kwargs.items():
+        cur = getattr(options, k)
+        if cur is v or cur == _OPTION_DEFAULTS[k]:
+            continue            # kwarg refines a knob the options left alone
+        try:
+            same = bool(v == cur)
+        except Exception:
+            same = False
+        if not same:
+            raise ValueError(
+                f"compile option {k!r} passed both in options= ({cur!r}) "
+                f"and as a keyword ({v!r}); set it one way, not both")
+    return dataclasses.replace(options, **kwargs)
+
+
 @dataclasses.dataclass
 class CompiledStencil:
     program: Program
@@ -47,16 +125,15 @@ class CompiledStencil:
         return self._fn(dict(fields), dict(scalars or {}), dict(coeffs or {}))
 
 
-def compile_program(p: Program, grid, *, backend: str = "pallas",
-                    plan: DataflowPlan | None = None, jit: bool = True,
-                    interpret: bool = True, dtype: str = "float32",
-                    strategy: str = "auto", steps: int | None = None,
-                    update=None, carry_write: str | None = None,
-                    tune_config=None, plan_cache=None,
-                    mesh=None, mesh_axes=None,
-                    boundary=None, schedule: str | None = None
-                    ) -> CompiledStencil:
+def compile_program(p: Program, grid, *,
+                    options: CompileOptions | None = None,
+                    **kwargs) -> CompiledStencil:
     """Compile ``p`` for ``grid`` — local or SPMD, single-step or fused loop.
+
+    Configuration rides in a :class:`CompileOptions` (``options=``), or as
+    loose keyword arguments with the same names — both are normalised into
+    one validated ``CompileOptions`` before any work happens, and passing
+    the same knob both ways with different values raises.
 
     With ``steps=N`` and an ``update(fields, outputs) -> fields`` rule, the
     whole time loop is lowered into the compiled program (one ``jax.jit``
@@ -96,12 +173,35 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
     ``plan_cache`` (:class:`~repro.core.tune.PlanCache`) override the search
     knobs and cache location.  ``carry_write=None`` defers to the tuned
     style (or ``"repad"`` under any other strategy).
+
+    ``time_tile=T`` (temporal blocking, stream schedule only) pipelines T
+    time steps through every sweep: the fused loop then runs ``steps // T``
+    chained sweeps plus one remainder sweep, and each input plane is
+    fetched from HBM once per T steps.  Requires ``steps``/``update``; the
+    stream legaliser may demote the *effective* depth to 1 (recorded on
+    ``plan.stream.time_tile``) when the program cannot chain.
     """
+    o = _resolve_options(options, kwargs)
+    backend, plan, jit, interpret = o.backend, o.plan, o.jit, o.interpret
+    dtype, strategy, steps, update = o.dtype, o.strategy, o.steps, o.update
+    carry_write, tune_config = o.carry_write, o.tune_config
+    plan_cache, mesh, mesh_axes = o.plan_cache, o.mesh, o.mesh_axes
+    boundary, schedule, time_tile = o.boundary, o.schedule, o.time_tile
+
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
         raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
+    if time_tile is not None:
+        time_tile = int(time_tile)
+        if time_tile < 1:
+            raise ValueError(f"time_tile must be >= 1, got {time_tile}")
+        if time_tile > 1 and steps is None:
+            raise ValueError(
+                "time_tile > 1 pipelines T time steps through one stream "
+                "sweep, which applies the update rule in-kernel — it needs "
+                "the fused loop: pass steps=N and update=")
     if boundary is not None:
         p = p.with_boundary(boundary)
 
@@ -131,7 +231,8 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
             plan = auto_plan(p, plan_grid, backend=backend,
                              interpret=interpret, dtype=dtype,
                              strategy=strategy, steps=steps,
-                             schedule=schedule or "block")
+                             schedule=schedule or "block",
+                             time_tile=time_tile or 1)
     # plans can be shared (PlanCache entries, caller-held objects): the
     # compiled executable always gets its own deep copy, retargeted to the
     # requested backend/mesh, so no compile ever mutates another's plan
@@ -140,12 +241,16 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         overrides["backend"] = backend
     if mesh is not None and plan.mesh_axes_for(ndim) != mesh_axes:
         overrides["mesh_axes"] = mesh_axes
+    if time_tile is not None and plan.time_tile != time_tile:
+        overrides["time_tile"] = time_tile
     if schedule is not None and plan.schedule != schedule:
         # retargeting the schedule invalidates any cached stream geometry;
         # a stream plan's block is a degenerate one-plane placeholder, so
         # converting to "block" re-derives a real tile from the heuristic
+        # (and drops any temporal chain — it is stream-only)
         overrides.update(schedule=schedule, stream=None)
         if schedule == "block" and plan.schedule == "stream":
+            overrides.setdefault("time_tile", 1)
             overrides["block"] = auto_plan(
                 p, plan_grid, backend=backend, interpret=interpret,
                 dtype=plan.dtype, steps=steps).block
@@ -170,7 +275,9 @@ def compile_program(p: Program, grid, *, backend: str = "pallas",
         # the plan's cached StreamSpec and the kernels all share it
         graph = dataflow.lower_to_dataflow(p, plan, plan_grid)
         plan = dataclasses.replace(plan, stream=graph.spec())
-        group_halos = [r.halo for r in graph.regions]
+        # chain-accumulated when the graph temporal-blocks: the fused-loop
+        # carry must cover what the chained kernels slice per sweep
+        group_halos = graph.group_halos()
 
     shard = None
     if mesh is not None:

@@ -54,6 +54,12 @@ class StreamSpec:
       the block schedule's overlapped-tiling recompute.
     * ``leads`` — per region, how many planes ahead of the output plane the
       stream front runs (the hi-side stream halo).
+    * ``time_tile`` — the *effective* temporal-blocking depth: how many time
+      steps one sweep actually chains (the paper's pipelined timestep compute
+      regions).  The plan's ``time_tile`` records the request; legalisation
+      (:func:`repro.core.dataflow.chain_split_reason`) demotes it to 1 here
+      when the chain cannot stream in one sweep (multiple regions, periodic
+      wraparound, non-persistent inputs).
     """
 
     axis: int = 0
@@ -61,6 +67,7 @@ class StreamSpec:
     depths: tuple = ()
     rings: tuple = ()
     leads: tuple = ()
+    time_tile: int = 1
 
     def __post_init__(self):
         self.regions = tuple(tuple(int(i) for i in r) for r in self.regions)
@@ -69,6 +76,7 @@ class StreamSpec:
         self.rings = tuple({str(f): int(d) for f, d in d.items()}
                            for d in self.rings)
         self.leads = tuple(int(v) for v in self.leads)
+        self.time_tile = max(1, int(self.time_tile))
 
 
 def stream_spec_to_dict(s: StreamSpec | None) -> dict | None:
@@ -80,6 +88,7 @@ def stream_spec_to_dict(s: StreamSpec | None) -> dict | None:
         "depths": [dict(d) for d in s.depths],
         "rings": [dict(d) for d in s.rings],
         "leads": list(s.leads),
+        "time_tile": int(s.time_tile),
     }
 
 
@@ -90,7 +99,8 @@ def stream_spec_from_dict(d: dict | None) -> StreamSpec | None:
                       regions=d.get("regions", ()),
                       depths=d.get("depths", ()),
                       rings=d.get("rings", ()),
-                      leads=d.get("leads", ()))
+                      leads=d.get("leads", ()),
+                      time_tile=int(d.get("time_tile", 1)))
 
 
 @dataclasses.dataclass
@@ -120,6 +130,11 @@ class DataflowPlan:
     # shift-register geometry when schedule == "stream" (None = derive at
     # compile time from the fuse groups)
     stream: StreamSpec | None = None
+    # temporal blocking: pipeline T time steps through one stream sweep
+    # (window-buffer depths and halo margins accumulate per chained step;
+    # the fused loop advances steps // T outer iterations).  Requested
+    # depth; the legalised effective depth lives on ``stream.time_tile``.
+    time_tile: int = 1
 
     def __post_init__(self):
         if self.mesh_axes is not None:
@@ -128,6 +143,14 @@ class DataflowPlan:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"unknown schedule {self.schedule!r}; valid: "
                              + ", ".join(repr(s) for s in SCHEDULES))
+        self.time_tile = int(self.time_tile)
+        if self.time_tile < 1:
+            raise ValueError(f"time_tile must be >= 1, got {self.time_tile}")
+        if self.time_tile > 1 and self.schedule != "stream":
+            raise ValueError(
+                "time_tile > 1 is temporal blocking through the stream "
+                "sweep; it requires schedule='stream' (the block schedule "
+                f"has no chained lowering), got schedule={self.schedule!r}")
 
     def mesh_axes_for(self, ndim: int) -> tuple:
         """Mesh axis names normalised to ``ndim`` entries (None = unsharded)."""
@@ -136,8 +159,9 @@ class DataflowPlan:
     def describe(self) -> str:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
         ma = self.mesh_axes_for(len(self.block))
+        tt = f", time_tile={self.time_tile}" if self.time_tile > 1 else ""
         return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
-                f"schedule={self.schedule}, mesh_axes={ma})")
+                f"schedule={self.schedule}{tt}, mesh_axes={ma})")
 
 
 # --------------------------------------------------------------------------
@@ -145,11 +169,13 @@ class DataflowPlan:
 # --------------------------------------------------------------------------
 
 #: Version of the serialised plan layout.  Bumped whenever a field is added
-#: or its meaning changes (v2: ``schedule`` + ``StreamSpec``).  Deserialising
-#: is tolerant — unknown keys are ignored, missing new keys get their
-#: defaults — so the version mainly lets cache layers treat *stale* records
-#: as misses rather than guessing at their semantics.
-PLAN_SCHEMA_VERSION = 2
+#: or its meaning changes (v2: ``schedule`` + ``StreamSpec``; v3: temporal
+#: blocking — ``time_tile`` on the plan and the effective depth on the
+#: stream spec).  Deserialising is tolerant — unknown keys are ignored,
+#: missing new keys get their defaults — so the version mainly lets cache
+#: layers treat *stale* records as misses rather than guessing at their
+#: semantics.
+PLAN_SCHEMA_VERSION = 3
 
 
 def plan_to_dict(plan: DataflowPlan) -> dict:
@@ -166,6 +192,7 @@ def plan_to_dict(plan: DataflowPlan) -> dict:
         "halo_every": int(plan.halo_every),
         "schedule": plan.schedule,
         "stream": stream_spec_to_dict(plan.stream),
+        "time_tile": int(plan.time_tile),
     }
 
 
@@ -185,6 +212,7 @@ def plan_from_dict(d: dict) -> DataflowPlan:
         halo_every=int(d.get("halo_every", 1)),
         schedule=d.get("schedule", "block"),
         stream=stream_spec_from_dict(d.get("stream")),
+        time_tile=int(d.get("time_tile", 1)),
     )
 
 
@@ -300,26 +328,60 @@ def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
 # Time-loop update-rule normalisation
 # --------------------------------------------------------------------------
 
+#: The accepted update-rule signatures, for error messages and docs.
+UPDATE_SIGNATURES = ("update(fields, outputs)",
+                     "update(fields, outputs, scalars)")
+
+
 def adapt_update(update):
     """Normalise a time-loop update rule to ``fn(fields, outputs, scalars)``.
 
-    Historical rules take ``(fields, outputs)``; rules that need runtime
-    scalars inside the fused loop (a traced ``dt``, the serving layer's
-    bucket-size scalars) take ``(fields, outputs, scalars)``.  Every
-    time-loop lowering routes the rule through here, so both signatures
-    work on all backends, local and sharded.  Idempotent: adapting an
-    already-adapted rule returns it unchanged.
+    This is the update-rule *contract* of every fused time loop
+    (``compile_program(..., steps=N, update=...)``), on all backends, local
+    and sharded.  Two forms are accepted:
+
+    * ``update(fields, outputs) -> fields`` — the historical rule: maps the
+      current persistent fields and this step's program outputs to the next
+      step's fields (e.g. a forward-Euler ``u + dt * su``);
+    * ``update(fields, outputs, scalars) -> fields`` — additionally receives
+      the runtime scalars mapping, for rules that need traced values inside
+      the loop (a traced ``dt``, the serving layer's bucket-size scalars).
+
+    Every time-loop lowering routes the rule through here, so both
+    signatures work everywhere.  Idempotent: adapting an already-adapted
+    rule returns it unchanged.  A callable matching *neither* form — wrong
+    arity for both — raises a :class:`TypeError` naming the accepted
+    signatures here, at compile time, instead of a bare arity error from
+    deep inside the traced loop body.
     """
     if update is None or getattr(update, "_takes_scalars", False):
         return update
+    if not callable(update):
+        raise TypeError(
+            f"update rule must be callable, got {type(update).__name__}; "
+            "accepted signatures: " + " or ".join(UPDATE_SIGNATURES))
     try:
         params = list(inspect.signature(update).parameters.values())
-        takes3 = (len([q for q in params
-                       if q.kind in (q.POSITIONAL_ONLY,
-                                     q.POSITIONAL_OR_KEYWORD)]) >= 3
-                  or any(q.kind == q.VAR_POSITIONAL for q in params))
     except (TypeError, ValueError):
+        params = None            # builtins/C callables: assume the 2-form
+    if params is None:
         takes3 = False
+    else:
+        pos = [q for q in params if q.kind in (q.POSITIONAL_ONLY,
+                                               q.POSITIONAL_OR_KEYWORD)]
+        required = [q for q in pos if q.default is q.empty]
+        var_pos = any(q.kind == q.VAR_POSITIONAL for q in params)
+        # can the callable be invoked with exactly 2 / exactly 3 positional
+        # arguments?  (keyword-only params with defaults don't matter)
+        fits2 = len(required) <= 2 and (len(pos) >= 2 or var_pos)
+        fits3 = len(required) <= 3 and (len(pos) >= 3 or var_pos)
+        if not fits2 and not fits3:
+            raise TypeError(
+                f"update rule {getattr(update, '__name__', update)!r} takes "
+                f"{len(required)} required positional argument(s); a fused "
+                "time-loop update rule must accept one of: "
+                + " or ".join(UPDATE_SIGNATURES))
+        takes3 = fits3
     if takes3:
         def fn(fields, outputs, scalars, _u=update):
             return _u(fields, outputs, scalars)
@@ -552,12 +614,13 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
 def plan_group_halos(p: Program, plan: DataflowPlan) -> list:
     """One :class:`~repro.core.passes.GroupHalo` per executed kernel of
     ``plan`` — block-schedule fuse groups via :func:`infer_halo`, stream
-    regions (post-legalisation, with shift-register stream-axis halos) via
+    regions (post-legalisation, with shift-register stream-axis halos, and
+    reach accumulated over the chained steps when ``time_tile > 1``) via
     the dataflow layer.  Every carry/shard sizing goes through here so the
     padding always matches what the lowered kernels will slice."""
     if plan.schedule == "stream":
         from .dataflow import lower_to_dataflow
-        return [r.halo for r in lower_to_dataflow(p, plan).regions]
+        return lower_to_dataflow(p, plan).group_halos()
     return [infer_halo(p, grp) for grp in plan.groups]
 
 
@@ -612,25 +675,46 @@ def _vmem_cost_stream(p: Program, plan: DataflowPlan, grid: tuple,
     padded plane per input), temp ring buffers, one margin-extended result
     plane per op, and the output planes in flight.  Unlike the block path
     there is no tile geometry — the non-stream axes are resident whole, so
-    a carry's ``input_pad`` slicing never enlarges the kernel windows."""
+    a carry's ``input_pad`` slicing never enlarges the kernel windows.
+
+    With temporal blocking (effective ``time_tile = T > 1``) the chained
+    kernel claims strictly more scratch, and the tuner's pruning must see
+    it: the external plane buffers widen to the T-fold accumulated halo,
+    every later chain stage keeps a window-depth ring of each persistent
+    field at its own (shrinking) stage extent, and each stage's op planes
+    carry the stage's accumulated margin.  Pricing only the T=1 geometry
+    here would admit chained plans that overflow scratch at run time.
+    """
     if graph is None:
         from .dataflow import lower_to_dataflow
         graph = lower_to_dataflow(p, plan)
     ndim = p.ndim
+    T = getattr(graph, "time_tile", 1)
     worst = 0
     for region in graph.regions:
         gh = region.halo
-        plane = [grid[a] + int(gh.input_halo[a, 0]) + int(gh.input_halo[a, 1])
-                 for a in range(1, ndim)]
+        hl = [int(gh.input_halo[a, 0]) for a in range(ndim)]
+        hh = [int(gh.input_halo[a, 1]) for a in range(ndim)]
+        # stage-s working extent on a non-stream axis: grid + margins +
+        # (T-1-s) accumulated halo steps; stage 0 reads the full T-fold
+        # padded external planes
+        plane = [grid[a] + T * (hl[a] + hh[a]) for a in range(1, ndim)]
         total = 0
         for f in gh.group_inputs:
             total += region.depths[f] * int(np.prod(plane)) * bs
-        for i in region.ops:
-            m = gh.margins[i]
-            ext = [grid[a] + int(m[a, 0]) + int(m[a, 1])
-                   for a in range(1, ndim)]
-            planes = 1 + region.rings.get(p.ops[i].out, 0)
-            total += planes * int(np.prod(ext)) * bs
+        for s in range(1, T):
+            ext_s = [grid[a] + (T - s) * (hl[a] + hh[a])
+                     for a in range(1, ndim)]
+            for f in gh.group_inputs:
+                total += region.depths[f] * int(np.prod(ext_s)) * bs
+        for s in range(T):
+            acc = T - 1 - s
+            for i in region.ops:
+                m = gh.margins[i]
+                ext = [grid[a] + int(m[a, 0]) + int(m[a, 1])
+                       + acc * (hl[a] + hh[a]) for a in range(1, ndim)]
+                planes = 1 + region.rings.get(p.ops[i].out, 0)
+                total += planes * int(np.prod(ext)) * bs
         total += len(gh.group_outputs) * int(np.prod(grid[1:])) * bs
         worst = max(worst, total)
     return 2 * worst  # double-buffered pipeline, as in the block schedule
@@ -641,7 +725,8 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
               dtype: str = "float32",
               vmem_budget: int = hw.VMEM_PLAN_BUDGET,
               steps: int | None = None,
-              schedule: str = "block") -> DataflowPlan:
+              schedule: str = "block",
+              time_tile: int = 1) -> DataflowPlan:
     """Pick fuse groups and a lane-aligned block shape that fits VMEM.
 
     Mirrors the paper's auto-optimisation: the planner, not the programmer,
@@ -659,7 +744,11 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
     if schedule == "stream":
         return _auto_plan_stream(p, grid, groups, backend=backend,
                                  interpret=interpret, dtype=dtype,
-                                 vmem_budget=vmem_budget)
+                                 vmem_budget=vmem_budget,
+                                 time_tile=time_tile)
+    if time_tile > 1:
+        raise ValueError("time_tile > 1 requires schedule='stream' "
+                         "(temporal blocking chains the stream sweep)")
 
     # start from a generous tile and shrink to fit the budget
     blk = []
@@ -701,12 +790,13 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
 
 def _auto_plan_stream(p: Program, grid: tuple, groups: list, *,
                       backend: str, interpret: bool, dtype: str,
-                      vmem_budget: int) -> DataflowPlan:
+                      vmem_budget: int, time_tile: int = 1) -> DataflowPlan:
     """Stream-scheduled plan: one rolling-window sweep over the outer axis
     per (legalised) region, non-stream axes resident whole.  The ``block``
     field records the degenerate one-plane tile for display/cost purposes.
-    If the full-slab window buffers blow the VMEM budget the only lever is
-    a finer region split (intermediates stream through HBM)."""
+    If the full-slab window buffers blow the VMEM budget the levers are,
+    in order: a shallower temporal chain (``time_tile`` halves toward 1),
+    then a finer region split (intermediates stream through HBM)."""
     if backend != "pallas":
         raise ValueError(
             f"schedule='stream' is a pallas dataflow schedule; backend "
@@ -715,16 +805,22 @@ def _auto_plan_stream(p: Program, grid: tuple, groups: list, *,
     ndim = p.ndim
     block = (1,) + grid[1:]
 
-    def build(groups):
+    def build(groups, tile):
         plan = DataflowPlan(groups=groups, block=block, dtype=dtype,
                             backend=backend, interpret=interpret,
-                            mesh_axes=(None,) * ndim, schedule="stream")
+                            mesh_axes=(None,) * ndim, schedule="stream",
+                            time_tile=tile)
         graph = lower_to_dataflow(p, plan)
         plan.stream = graph.spec()
         return plan, graph
 
-    plan, graph = build(groups)
+    tile = max(1, int(time_tile))
+    plan, graph = build(groups, tile)
+    while (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
+           and tile > 1):
+        tile //= 2               # chained buffers too deep: shallower chain
+        plan, graph = build(groups, tile)
     if (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
             and any(len(g) > 1 for g in groups)):
-        plan, _ = build(stage_split(p, "per_field"))
+        plan, _ = build(stage_split(p, "per_field"), tile)
     return plan

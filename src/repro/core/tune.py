@@ -66,11 +66,12 @@ PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
 #: On-disk plan-cache schema version.  Bumped together with
 #: :data:`~repro.core.schedule.PLAN_SCHEMA_VERSION` whenever serialised
 #: plans gain fields whose absence would change behaviour (v2: the
-#: ``schedule`` axis + ``StreamSpec``).  A cache written by another version
-#: is treated as a **miss** — re-tuning is cheap, silently misreading a
-#: stale record is not — and the next store rewrites the file at the
-#: current version.
-CACHE_SCHEMA_VERSION = 2
+#: ``schedule`` axis + ``StreamSpec``; v3: temporal blocking — ``time_tile``
+#: on the plan and the effective chain depth on the stream spec).  A cache
+#: written by another version is treated as a **miss** — re-tuning is
+#: cheap, silently misreading a stale record is not — and the next store
+#: rewrites the file at the current version.
+CACHE_SCHEMA_VERSION = 3
 
 
 def default_cache_path() -> str:
@@ -92,6 +93,10 @@ class TuneConfig:
     vmem_budget: int = hw.VMEM_PLAN_BUDGET
     strategies: tuple = ("auto", "fused", "per_field")
     carry_writes: tuple = ("repad", "inplace")
+    # temporal-blocking depths tried for stream candidates (fused-loop mode
+    # only — single-step sweeps have no update rule to chain through).
+    # Depths that legalise to the same effective chain dedup to one run.
+    time_tiles: tuple = (1, 2, 4)
     dtypes: tuple | None = None   # None = the dtype compile_program asked for
     seed: int = 0               # synthetic measurement data
     # the cache key identifies the *problem*, not the search effort: a plan
@@ -292,10 +297,16 @@ def _behaviour_key(plan: DataflowPlan, carry_write: str, backend: str,
         return (cw,)
     if plan.schedule == "stream":
         # streams ignore block shape; the legalised regions decide the
-        # kernels (two strategies whose groups legalise identically tie)
+        # kernels (two strategies whose groups legalise identically tie).
+        # The *effective* chain depth matters only in fused-loop mode —
+        # single-step sweeps never chain — and requested depths demoted to
+        # the same effective depth lower identically.
+        eff = (plan.stream.time_tile if plan.stream is not None
+               else plan.time_tile)
         regions = (plan.stream.regions if plan.stream is not None
                    else tuple(tuple(g) for g in plan.groups))
-        return ("stream", regions, plan.dtype, cw)
+        return ("stream", regions, plan.dtype, cw,
+                int(eff) if with_loop else 1)
     return (tuple(tuple(g) for g in plan.groups), tuple(plan.block),
             plan.dtype, cw)
 
@@ -335,15 +346,22 @@ def _candidates(p: Program, grid, backend: str, interpret: bool,
                           + (f"/dtype={dt}" if dt != "float32" else ""))
         # the stream schedule is a first-class plan dimension: one
         # shift-register candidate per fuse strategy (block shape does not
-        # apply — the non-stream axes are resident whole)
+        # apply — the non-stream axes are resident whole) x temporal-chain
+        # depth (fused-loop mode only; depths legalised to the same
+        # effective chain dedup via the behaviour key)
         if allow_stream and backend == "pallas" and ndim >= 2:
-            plan_s = auto_plan(p, grid, backend=backend, interpret=interpret,
-                               dtype=dt, strategy=strat,
-                               vmem_budget=cfg.vmem_budget, steps=steps,
-                               schedule="stream")
-            for cw in carry_writes:
-                add(plan_s, cw, f"stream/{strat}/cw={cw}"
-                               + (f"/dtype={dt}" if dt != "float32" else ""))
+            tiles = tuple(cfg.time_tiles) if with_loop else (1,)
+            for tt in tiles:
+                plan_s = auto_plan(p, grid, backend=backend,
+                                   interpret=interpret, dtype=dt,
+                                   strategy=strat,
+                                   vmem_budget=cfg.vmem_budget, steps=steps,
+                                   schedule="stream", time_tile=int(tt))
+                tag = f"/T={int(tt)}" if int(tt) > 1 else ""
+                for cw in carry_writes:
+                    add(plan_s, cw, f"stream/{strat}{tag}/cw={cw}"
+                                   + (f"/dtype={dt}" if dt != "float32"
+                                      else ""))
     return out
 
 
@@ -381,16 +399,18 @@ def _default_timer_factory(warmup: int, repeats: int) -> Callable:
 
 def _measure(p, grid, cand: _Candidate, data, update, cfg: TuneConfig,
              timer, mesh=None, mesh_axes=None) -> None:
-    from .pipeline import compile_program  # deferred: pipeline imports tune
+    # deferred: pipeline imports tune
+    from .pipeline import CompileOptions, compile_program
     fields, scalars, coeffs = data
-    ex = compile_program(p, grid, backend=cand.plan.backend, plan=cand.plan,
-                         mesh=mesh, mesh_axes=mesh_axes)
+    ex = compile_program(p, grid, options=CompileOptions(
+        backend=cand.plan.backend, plan=cand.plan,
+        mesh=mesh, mesh_axes=mesh_axes))
     cand.us_single = timer(lambda: ex(fields, scalars, coeffs)) * 1e6
     if update is not None:
-        exN = compile_program(p, grid, backend=cand.plan.backend,
-                              plan=cand.plan, steps=cfg.steps, update=update,
-                              carry_write=cand.carry_write,
-                              mesh=mesh, mesh_axes=mesh_axes)
+        exN = compile_program(p, grid, options=CompileOptions(
+            backend=cand.plan.backend, plan=cand.plan, steps=cfg.steps,
+            update=update, carry_write=cand.carry_write,
+            mesh=mesh, mesh_axes=mesh_axes))
         cand.us_fused = timer(lambda: exN(fields, scalars, coeffs)) * 1e6
 
 
@@ -469,6 +489,10 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
         "plan": plan_to_dict(winner.plan),
         "carry_write": winner.carry_write,
         "label": winner.label,
+        # effective temporal-chain depth of the winner (1 = unchained)
+        "time_tile": int(winner.plan.stream.time_tile
+                         if winner.plan.stream is not None
+                         else winner.plan.time_tile),
         "us_single": winner.us_single,
         "us_fused": winner.us_fused,
         "baseline_us_single": baseline.us_single,

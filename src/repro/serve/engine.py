@@ -39,7 +39,7 @@ import numpy as np
 
 from .. import hw
 from ..core.ir import Program
-from ..core.pipeline import compile_program
+from ..core.pipeline import CompileOptions, compile_program
 from ..core.schedule import BucketSpec, bucket_fingerprint, bucket_for
 from ..core.tune import PlanCache, make_serve_record, read_serve_record
 from .bucket import embed_request, serving_program, wrap_update
@@ -330,11 +330,12 @@ class StencilEngine:
         update = (None if req.update is None
                   else wrap_update(sp, spec, req.update))
         ex = compile_program(
-            sp, spec.bucket, backend=self.backend, plan=plan, jit=False,
-            interpret=self.interpret, dtype=self.dtype,
-            strategy=self.strategy, steps=req.steps, update=update,
-            carry_write=carry_write, schedule=self.schedule,
-            plan_cache=self.plan_cache)
+            sp, spec.bucket, options=CompileOptions(
+                backend=self.backend, plan=plan, jit=False,
+                interpret=self.interpret, dtype=self.dtype,
+                strategy=self.strategy, steps=req.steps, update=update,
+                carry_write=carry_write, schedule=self.schedule,
+                plan_cache=self.plan_cache))
         self.stats.compiles += 1
         cw = ex.time_spec.carry_write if ex.time_spec is not None else "repad"
         if self.plan_cache is not None and not record_hit:
