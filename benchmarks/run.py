@@ -98,6 +98,8 @@ def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
     if mesh_shape:
         run_sharded_loop(emit_row, grid=grid, steps=steps,
                          mesh_shape=mesh_shape)
+        run_stream_mesh_rows(emit_row, grid=grid, steps=steps,
+                             mesh_shape=mesh_shape)
     doc = {
         "kind": "bench_smoke",
         "grid": list(grid),
@@ -205,6 +207,60 @@ def run_sharded_loop(emit_row, grid: tuple, steps: int,
                 "/fused_loop",
                 dt * 1e6, f"{steps / dt:.2f} steps/s "
                           f"local={exN.shard.local_grid}")
+
+
+def run_stream_mesh_rows(emit_row, grid: tuple, steps: int,
+                         mesh_shape: tuple) -> None:
+    """Stream-schedule-under-mesh rows: each shard sweeps the stream axis
+    over its local block with halo refresh inside the fused-loop carry.
+    Emits steps/sec for time_tile 1 and 2 plus the stream-vs-block ratio
+    on the same mesh (the block number is measured here, same data and
+    discipline as ``run_sharded_loop``, so the ratio is apples-to-apples)."""
+    import jax
+    import numpy as np
+    from repro.apps import pw_advection, pw_advection_update
+    from repro.core import CompileOptions, compile_program
+    from repro.dist.sharding import make_auto_mesh
+
+    names = ("X", "Y", "Z")[:len(mesh_shape)]
+    mesh = make_auto_mesh(mesh_shape, names)
+    update = pw_advection_update(0.1)
+    tag = "x".join(str(g) for g in grid)
+    mtag = "x".join(str(m) for m in mesh_shape)
+    p = pw_advection()
+    rng = np.random.default_rng(0)
+    fields = {f: rng.normal(size=grid).astype(np.float32)
+              for f in ("u", "v", "w")}
+    scalars = {"tcx": np.float32(0.05), "tcy": np.float32(0.05)}
+    coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+              for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+
+    def measure(schedule, time_tile=None):
+        exN = compile_program(p, grid, options=CompileOptions(
+            backend="pallas", steps=steps, update=update, schedule=schedule,
+            time_tile=time_tile, mesh=mesh, mesh_axes=names))
+        jax.block_until_ready(exN(fields, scalars, coeffs)["u"])
+        dt = float("inf")
+        for _ in range(3):                      # best-of-3 (CPU noise)
+            t0 = time.perf_counter()
+            out = exN(fields, scalars, coeffs)
+            jax.block_until_ready(out["u"])
+            dt = min(dt, time.perf_counter() - t0)
+        return dt
+
+    sps = {}
+    for schedule in ("block", "stream"):
+        dt = measure(schedule)
+        sps[schedule] = steps / dt
+        emit_row(f"sched/pw_advection/{tag}/pallas/{schedule}/mesh={mtag}"
+                 "/fused_loop", dt * 1e6, f"{steps / dt:.2f} steps/s")
+    emit_row(f"sched/pw_advection/{tag}/pallas/mesh={mtag}/stream_vs_block",
+             0.0, f"{sps['stream'] / sps['block']:.2f}x stream vs block "
+                  "under mesh")
+    dt = measure("stream", time_tile=2)
+    emit_row(f"sched/pw_advection/{tag}/pallas/stream/mesh={mtag}"
+             "/time_tile=2/fused_loop", dt * 1e6,
+             f"{steps / dt:.2f} steps/s")
 
 
 def run_tune(out_path: str, cache_path: str) -> None:

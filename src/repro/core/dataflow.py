@@ -147,6 +147,11 @@ class StreamGraph:
     axis: int
     regions: list
     time_tile: int = 1
+    # the stream axis is domain-decomposed across a mesh: region halos were
+    # built with :func:`stream_halo`'s sharded lo-propagation (ghost planes
+    # must be *exact*, not maskable out-of-domain warm-up), and chain
+    # accumulation deepens the lo side too (:func:`chained_halo`)
+    stream_sharded: bool = False
 
     def spec(self) -> StreamSpec:
         """The plan-resident summary (what the tuner's cache round-trips)."""
@@ -163,7 +168,9 @@ class StreamGraph:
         """One :class:`~repro.core.passes.GroupHalo` per *lowered kernel*:
         the region halos, chain-accumulated when this graph temporal-blocks
         (carry/shard sizing must cover what the chained kernels slice)."""
-        return [chained_halo(r.halo, self.time_tile) for r in self.regions]
+        return [chained_halo(r.halo, self.time_tile,
+                             stream_sharded=self.stream_sharded)
+                for r in self.regions]
 
     def to_text(self) -> str:
         """HLS-dialect-style dump (docs, debugging, golden tests)."""
@@ -286,23 +293,34 @@ def effective_time_tile(p: Program, regions: Sequence, requested: int) -> int:
     return 1 if chain_split_reason(p, regions) is not None else requested
 
 
-def chained_halo(gh: GroupHalo, time_tile: int) -> GroupHalo:
+def chained_halo(gh: GroupHalo, time_tile: int,
+                 stream_sharded: bool = False) -> GroupHalo:
     """Input-halo reach of a T-chained region (paper: margins accumulate
     per chained step).
 
     Stage ``s+1`` trails stage ``s`` by the region ``lead`` along the
     stream axis, so the sweep front runs ``T x lead`` planes ahead of the
-    final output plane while the lo-side reach stays one window deep.  On
-    the non-stream axes every chained stage widens the working extent by
-    one full halo step, so external inputs must arrive padded by ``T x``
-    the single-step halo on both sides.  ``margins`` are kept per-stage by
-    the lowering; carry/shard sizing only consumes ``input_halo``."""
+    final output plane.  On the non-stream axes every chained stage widens
+    the working extent by one full halo step, so external inputs must
+    arrive padded by ``T x`` the single-step halo on both sides.
+
+    The **lo side of the stream axis** depends on where the sweep starts:
+    locally (``stream_sharded=False``) it stays one window deep — the
+    warm-up planes below the sweep are out of the global domain, masked to
+    zero, and the clamped output overwrites them — but when the stream axis
+    is domain-decomposed the planes below a shard's block belong to its
+    neighbour and every chained stage needs them *exact*, so the lo-side
+    ghost planes deepen by one per-step reach per stage (``T x`` the
+    sharded per-step lo halo).  ``margins`` are kept per-stage by the
+    lowering; carry/shard sizing only consumes ``input_halo``."""
     T = max(1, int(time_tile))
     if T == 1:
         return gh
     halo = np.array(gh.input_halo)
     halo[0, 1] *= T              # stream front: lead accumulates per stage
     halo[1:, :] *= T             # non-stream: one halo step per stage
+    if stream_sharded:
+        halo[0, 0] *= T          # sharded sweep start: exact ghosts per stage
     return GroupHalo(margins=gh.margins, input_halo=halo,
                      group_inputs=gh.group_inputs,
                      group_outputs=gh.group_outputs,
@@ -314,7 +332,8 @@ def chained_halo(gh: GroupHalo, time_tile: int) -> GroupHalo:
 # --------------------------------------------------------------------------
 
 
-def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
+def stream_halo(p: Program, region: Sequence[int],
+                stream_sharded: bool = False) -> GroupHalo:
     """Margins and window halo for one *stream* region.
 
     Differs from :func:`~repro.core.passes.infer_halo` exactly where the
@@ -323,6 +342,16 @@ def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
     buffer instead of forcing recompute) and the window halo is the raw
     access reach (every op evaluates at the same output plane).  The
     non-stream axes keep the block schedule's margin propagation.
+
+    With ``stream_sharded`` (the stream axis is domain-decomposed across a
+    mesh) the lo-side stream halo additionally propagates through in-region
+    producer chains: a ring-buffered temp read ``k`` planes back makes its
+    producer's value load-bearing ``k`` planes below the output plane, and
+    that producer's own external reads reach further still.  Locally this
+    is unobservable — warm-up planes below the sweep are out of the global
+    domain and masked to zero — but a shard whose block starts mid-domain
+    must fetch *exact* neighbour planes deep enough that every ring warms
+    up with true values before the first owned output plane.
     """
     region = list(region)
     gset = set(region)
@@ -344,6 +373,12 @@ def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
             internal.append(out)
 
     margins = {i: _zeros(ndim) for i in region}
+    # stream-axis lo margin per op: how many planes *below* the output
+    # plane an op's value must be exact for in-region consumers (ring
+    # back-references accumulate through producer chains).  Stays zero
+    # unless the stream axis is sharded — locally the warm-up planes are
+    # out-of-domain and masked, so no extra fetch is needed.
+    smargin = {i: 0 for i in region}
     for i in reversed(region):
         m = margins[i]
         for a in p.ops[i].accesses():
@@ -356,6 +391,8 @@ def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
                     raise ValueError(
                         f"region {region} not stream-legal: {a.field!r} read "
                         f"at stream offset +{o0}; run legalize_stream_groups")
+                if stream_sharded:
+                    smargin[pi] = max(smargin[pi], smargin[i] - o0)
                 need = _zeros(ndim)
                 for ax in range(1, ndim):
                     o = a.offset[ax]
@@ -375,7 +412,7 @@ def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
             if a.field not in group_inputs:
                 group_inputs.append(a.field)
             o0 = int(a.offset[STREAM_AXIS])
-            halo[0, 0] = max(halo[0, 0], -o0)
+            halo[0, 0] = max(halo[0, 0], smargin[i] - o0)
             halo[0, 1] = max(halo[0, 1], o0)
             for ax in range(1, ndim):
                 o = a.offset[ax]
@@ -386,7 +423,7 @@ def stream_halo(p: Program, region: Sequence[int]) -> GroupHalo:
             if c.coeff not in group_coeffs:
                 group_coeffs.append(c.coeff)
             if ax == STREAM_AXIS:
-                halo[0, 0] = max(halo[0, 0], -c.offset)
+                halo[0, 0] = max(halo[0, 0], smargin[i] - c.offset)
                 halo[0, 1] = max(halo[0, 1], c.offset)
             else:
                 halo[ax, 0] = max(halo[ax, 0], m[ax, 0] - c.offset)
@@ -441,8 +478,8 @@ def _regions_legal(p: Program, regions) -> bool:
     return True
 
 
-def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None
-                      ) -> StreamGraph:
+def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None,
+                      stream_sharded: bool = False) -> StreamGraph:
     """Lower validated stencil IR + plan fuse groups to the dataflow layer.
 
     ``plan`` only contributes its ``groups`` (and, when present, a cached
@@ -451,6 +488,13 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None
     the tuner cache lowers identically).  ``grid`` is optional and only
     used for sanity checks — buffer depths derive from access offsets
     alone.
+
+    ``stream_sharded`` marks the stream axis as domain-decomposed across a
+    mesh: region input halos then carry the deepened lo-side ghost-plane
+    reach (see :func:`stream_halo` / :func:`chained_halo`).  The legalised
+    region split, window depths and ring depths are *identical* either way
+    — a :class:`~repro.core.schedule.StreamSpec` cached from a local tune
+    reuses cleanly under a mesh and vice versa.
     """
     if p.ndim < 2:
         raise ValueError(
@@ -470,7 +514,7 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None
 
     regions = []
     for ops in region_ops:
-        gh = stream_halo(p, ops)
+        gh = stream_halo(p, ops, stream_sharded=stream_sharded)
         depths, rings = window_depths(p, ops, gh)
         nodes: list = []
         for f in gh.group_inputs:
@@ -494,4 +538,4 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None
     eff = effective_time_tile(p, region_ops,
                               getattr(plan, "time_tile", 1))
     return StreamGraph(program=p.name, axis=STREAM_AXIS, regions=regions,
-                       time_tile=eff)
+                       time_tile=eff, stream_sharded=stream_sharded)

@@ -59,9 +59,11 @@ except AttributeError:  # pragma: no cover
 
 from ..kernels.stencil3d import build_group_call
 from . import boundary as bc
+from .dataflow import STREAM_AXIS, lower_to_dataflow
 from .ir import Program
 from .lower_jnp import lower as lower_jnp_step
 from .lower_pallas import _pad_coeffs, _run_groups
+from .lower_stream import build_stream_call
 from .schedule import DataflowPlan, ShardSpec, TimeLoopSpec, adapt_update
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float64": jnp.float64}
@@ -288,13 +290,55 @@ def _pallas_reach(calls, p: Program) -> dict:
     return reach
 
 
+def _stream_graph(p: Program, plan: DataflowPlan, shard: ShardSpec, graph):
+    """The plan's dataflow graph, lowered for this shard's topology.
+
+    A sharded stream axis needs *exact* neighbour ghost planes (the region
+    halos carry the ring-chain-propagated lo reach), so a graph built
+    without the flag must not drive a sharded sweep — rebuild unless the
+    caller handed one down from the pipeline."""
+    if plan.schedule != "stream":
+        return None
+    ss = shard.axis_size(STREAM_AXIS) > 1
+    if graph is None or bool(graph.stream_sharded) != ss:
+        graph = lower_to_dataflow(p, plan, shard.local_grid,
+                                  stream_sharded=ss)
+    return graph
+
+
+def _pallas_calls(p: Program, plan: DataflowPlan, local_grid, global_grid,
+                  jdtype, graph, time_tile: int = 1, update=None):
+    """The plan's kernel calls on the shard-local block.
+
+    Block and stream kernels expose the same geometry contract
+    (``group_inputs``/``halo_lo``/``input_pad`` slicing/``origin=``), so
+    the SPMD orchestrators below drive either schedule identically; a
+    stream sweep additionally chains ``time_tile`` timestep stages when
+    the fused-loop ``update`` rule rides in-kernel."""
+    if plan.schedule == "stream":
+        return [build_stream_call(p, region, local_grid, dtype=jdtype,
+                                  interpret=plan.interpret,
+                                  global_extent=global_grid,
+                                  time_tile=time_tile, update=update,
+                                  stream_sharded=graph.stream_sharded)
+                for region in graph.regions]
+    return [build_group_call(p, grp, plan.block, local_grid, dtype=jdtype,
+                             interpret=plan.interpret,
+                             global_extent=global_grid)
+            for grp in plan.groups]
+
+
 # --------------------------------------------------------------------------
 # single program step under shard_map
 # --------------------------------------------------------------------------
 
 def lower_sharded(p: Program, plan: DataflowPlan, global_grid,
-                  shard: ShardSpec, mesh: Mesh):
-    """Return fn(fields, scalars, coeffs) running one program step SPMD."""
+                  shard: ShardSpec, mesh: Mesh, graph=None):
+    """Return fn(fields, scalars, coeffs) running one program step SPMD.
+
+    Schedule-agnostic: ``plan.schedule`` picks block-tiled group kernels or
+    plane-sweeping stream kernels per shard (``graph`` optionally hands
+    down the pipeline's already-lowered dataflow graph)."""
     global_grid = tuple(int(g) for g in global_grid)
     jdtype = _DTYPES[plan.dtype]
     bnd = p.boundaries()
@@ -309,10 +353,9 @@ def lower_sharded(p: Program, plan: DataflowPlan, global_grid,
 
     degen = _degenerate(shard)
     if backend == "pallas":
-        calls = [build_group_call(p, grp, plan.block, shard.local_grid,
-                                  dtype=jdtype, interpret=plan.interpret,
-                                  global_extent=global_grid)
-                 for grp in plan.groups]
+        graph = _stream_graph(p, plan, shard, graph)
+        calls = _pallas_calls(p, plan, shard.local_grid, global_grid,
+                              jdtype, graph)
         if not degen:
             reach = _pallas_reach(calls, p)
 
@@ -369,7 +412,8 @@ def lower_sharded(p: Program, plan: DataflowPlan, global_grid,
 # --------------------------------------------------------------------------
 
 def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
-                            spec: TimeLoopSpec, update, mesh: Mesh):
+                            spec: TimeLoopSpec, update, mesh: Mesh,
+                            graph=None):
     """Return fn(fields, scalars, coeffs) -> final fields after
     ``spec.steps`` distributed iterations — ONE jitted dispatch.
 
@@ -379,11 +423,22 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
         fori_loop body:
             refresh halo slabs from the carry interiors (ppermute rings /
                 local wrap / zeros, axis by axis so corners are exact)
-            run the fuse groups against the refreshed buffers
+            run the plan's kernels against the refreshed buffers
             trace ``update`` once; write the new interiors back
 
     The final interiors are sliced out after the loop; no per-step host
     sync, no per-step re-dispatch, no re-tracing of ``update``.
+
+    Schedule-agnostic: ``plan.schedule = "stream"`` swaps the block-tiled
+    group kernels for per-shard plane-sweeping stream kernels behind the
+    same refresh-then-compute contract — still one exchange per field per
+    step.  With an effective ``time_tile = T > 1`` on the dataflow graph,
+    each loop iteration runs ONE chained sweep advancing T steps (all T
+    updates applied in-kernel; the carry padding covers the chain's
+    accumulated halos, so still one exchange per field per *chain*), the
+    loop runs ``spec.steps // T`` iterations, and a ``steps % T``
+    remainder runs once after it through a shallower chain.  ``graph``
+    optionally hands down the pipeline's already-lowered dataflow graph.
     """
     shard = spec.shard
     if shard is None:
@@ -439,20 +494,49 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
     out_specs = tuple(P(*mesh_axes) for _ in spec.persistent)
 
     degen = _degenerate(shard)
+    chain = 1
+    epilogue_calls = None
     if backend == "pallas":
-        calls = [build_group_call(p, grp, plan.block, local_grid,
-                                  dtype=jdtype, interpret=plan.interpret,
-                                  global_extent=global_grid)
-                 for grp in plan.groups]
+        graph = _stream_graph(p, plan, shard, graph)
+        T = int(getattr(graph, "time_tile", 1)) if graph is not None else 1
+        if T > 1:
+            # temporally-blocked chain: legality implies a single region
+            # (see dataflow.chain_split_reason); one chained sweep per loop
+            # iteration advances T steps, updates applied in-kernel
+            chain = T
+            calls = _pallas_calls(p, plan, local_grid, global_grid, jdtype,
+                                  graph, time_tile=T, update=update)
+            rem = int(spec.steps) % T
+            if rem:
+                epilogue_calls = _pallas_calls(p, plan, local_grid,
+                                               global_grid, jdtype, graph,
+                                               time_tile=rem, update=update)
+        else:
+            calls = _pallas_calls(p, plan, local_grid, global_grid, jdtype,
+                                  graph)
         reach = (_coeff_reach(p, shard) if degen
-                 else _pallas_reach(calls, p))
+                 else _pallas_reach(calls + (epilogue_calls or []), p))
 
-        def make_step(origin, coeffs):
+        def make_step(origin, coeffs, calls_):
             # degenerate mesh: the local pad path, so the graph (and its
             # rounding) bit-matches the single-device fused loop
-            pc_per_call = (_pad_coeffs(p, calls, coeffs, jdtype) if degen
-                           else _pallas_coeff_windows(p, calls, coeffs,
+            pc_per_call = (_pad_coeffs(p, calls_, coeffs, jdtype) if degen
+                           else _pallas_coeff_windows(p, calls_, coeffs,
                                                       origin, shard, reach))
+
+            if getattr(calls_[0], "returns_fields", False):
+                # chained stream sweep: ONE call advances every persistent
+                # field by its full chain depth and returns the new fields
+                call = calls_[0]
+
+                def step(fresh, svec):
+                    padded = {f: fresh[f] for f in call.group_inputs}
+                    return call(padded, svec, pc_per_call[0], origin=origin,
+                                input_pad={f: fpad[f]
+                                           for f in call.group_inputs})
+
+                step.returns_fields = True
+                return step
 
             def step(fresh, svec):
                 def resolve(call, f, env):
@@ -468,15 +552,17 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
                         mesh_axes, axis_sizes,
                         periodic=bnd[f] == "periodic"), None
 
-                return _run_groups(p, calls, svec, pc_per_call, resolve,
+                return _run_groups(p, calls_, svec, pc_per_call, resolve,
                                    origin=origin)
 
+            step.returns_fields = False
             return step
     elif backend in ("jnp_fused", "jnp_naive"):
         mode = backend.removeprefix("jnp_")
+        calls = [None]
         reach = _coeff_reach(p, shard)
 
-        def make_step(origin, coeffs):
+        def make_step(origin, coeffs, calls_):
             shift, coeff = _jnp_step_hooks(p, shard, origin, reach)
             raw = lower_jnp_step(p, mode, prepad=fpad, shift_fn=shift,
                                  coeff_fn=coeff)
@@ -484,28 +570,41 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
             def step(fresh, scal):
                 return raw(fresh, scal, coeffs)
 
+            step.returns_fields = False
             return step
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
     def local_fn(scal, fields, coeffs, origs):
         origin = _origin(shard, origs)
-        step = make_step(origin, coeffs)
+        step = make_step(origin, coeffs, calls)
+        step_epi = (make_step(origin, coeffs, epilogue_calls)
+                    if epilogue_calls is not None else None)
         # initial carry: zero-padded; the loop body refreshes halos before
         # the first compute, so the fill value is never observed
         carry = {f: jnp.pad(fields[f], carry_pads[f])
                  for f in spec.persistent}
 
-        def body(_, carry):
+        def advance(carry, stepfn):
             fresh = {f: refresh(f, carry[f]) for f in spec.persistent}
-            outputs = step(fresh, scal)
-            cur = {f: fresh[f][interior[f]] for f in spec.persistent}
-            new = dict(cur)
-            # the packed pallas scalar vector unpacks back to the name->value
-            # dict the update rule sees everywhere else
-            sdict = ({s: scal[i] for i, s in enumerate(p.scalars)}
-                     if backend == "pallas" else scal)
-            new.update(update(cur, outputs, sdict))
+            if stepfn.returns_fields:
+                # chained sweep: the kernel already applied every update
+                new = stepfn(fresh, scal)
+            else:
+                outputs = stepfn(fresh, scal)
+                cur = {f: fresh[f][interior[f]] for f in spec.persistent}
+                new = dict(cur)
+                # the packed pallas scalar vector unpacks back to the
+                # name->value dict the update rule sees everywhere else
+                sdict = ({s: scal[i] for i, s in enumerate(p.scalars)}
+                         if backend == "pallas" else scal)
+                if getattr(update, "_takes_origin", False) and not degen:
+                    # shard-aware rules (the serving bucket refresh) mask
+                    # in global coordinates; the degenerate mesh keeps the
+                    # local form so its graph stays bit-identical
+                    new.update(update(cur, outputs, sdict, origin=origin))
+                else:
+                    new.update(update(cur, outputs, sdict))
             out = {}
             for f in spec.persistent:
                 if spec.carry_write == "inplace":
@@ -516,7 +615,10 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
                                      carry_pads[f])
             return out
 
-        carry = jax.lax.fori_loop(0, spec.steps, body, carry)
+        carry = jax.lax.fori_loop(0, int(spec.steps) // chain,
+                                  lambda _, c: advance(c, step), carry)
+        if step_epi is not None:
+            carry = advance(carry, step_epi)
         return tuple(carry[f][interior[f]] for f in spec.persistent)
 
     smapped = _smap(local_fn, mesh, in_specs, out_specs)

@@ -51,7 +51,8 @@ from .schedule import DataflowPlan, TimeLoopSpec, adapt_update
 
 def build_stream_call(p: Program, region: StreamRegion, grid_shape,
                       dtype=jnp.float32, interpret: bool = True,
-                      global_extent=None, time_tile: int = 1, update=None):
+                      global_extent=None, time_tile: int = 1, update=None,
+                      stream_sharded: bool = False):
     """Build a callable(padded_inputs, scalars, coeffs, origin) -> outputs
     streaming one region over the outer axis (see module docstring).
 
@@ -72,6 +73,15 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
     the grid by stage T-1, whose updated planes are stored.  The chain
     assumes an *element-wise* update rule (the fused-loop contract): it is
     applied per plane at each stage's working extent.
+
+    ``stream_sharded`` marks the stream axis as domain-decomposed: the
+    caller (the SPMD orchestrator) then pads the lo side of the stream axis
+    with *exact* neighbour ghost planes — ``T x`` the region's (already
+    ring-deepened) per-step lo halo, mirroring :func:`~repro.core.dataflow.
+    chained_halo` — so every chain stage warms up on true values before the
+    shard's first owned plane.  ``region.halo`` must come from a graph
+    lowered with the same flag.  Unsharded sweeps keep the shallow lo pad;
+    a 1x1 mesh therefore traces the identical kernel to a local compile.
     """
     ndim = p.ndim
     gh = region.halo
@@ -89,7 +99,10 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
     hl = tuple(int(gh.input_halo[a, 0]) for a in range(ndim))
     hh = tuple(int(gh.input_halo[a, 1]) for a in range(ndim))
     lead = hh[0]
-    halo_lo = (hl[0],) + tuple(T * hl[a] for a in range(1, ndim))
+    # lo-side stream pad: shallow locally (warm-up planes are masked
+    # out-of-domain), chain-deepened exact ghosts under a sharded axis
+    halo_lo = ((T * hl[0]) if stream_sharded else hl[0],) \
+        + tuple(T * hl[a] for a in range(1, ndim))
     halo_hi = (T * lead,) + tuple(T * hh[a] for a in range(1, ndim))
     span = halo_lo[0] + halo_hi[0]    # stream reach of the whole chain
     n_steps = n0 + span               # padded planes = one grid step each
@@ -198,7 +211,7 @@ def build_stream_call(p: Program, region: StreamRegion, grid_shape,
             # the interior plane stage s completes this step (negative
             # during warm-up; the out index map clamps, and every ring
             # store masks by stream validity)
-            c_plane = t_step - hl[0] - (s + 1) * lead
+            c_plane = t_step - halo_lo[0] - (s + 1) * lead
             ring_refs = stage_ring_refs[s]
             ring_vals = {t: ring_refs[t][...] for t in ring_names}
             results: dict = {}

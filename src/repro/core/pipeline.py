@@ -107,6 +107,29 @@ def _resolve_options(options, kwargs) -> CompileOptions:
     return dataclasses.replace(options, **kwargs)
 
 
+def _check_schedule(backend: str, schedule: str | None) -> None:
+    """THE capability gate for schedule x backend x mesh combinations.
+
+    Every compile path funnels through here — the explicitly requested
+    ``schedule=`` before planning, and the plan-carried schedule after
+    retargeting — so an unsupported combination fails fast with one
+    message, never deep inside a lowering.  Valid combinations:
+
+    * ``schedule="block"``  — any backend; local or ``mesh=``; single-step
+      or fused ``steps=``;
+    * ``schedule="stream"`` — ``backend="pallas"`` only; local or
+      ``mesh=`` (the stream axis may itself be sharded), single-step or
+      fused ``steps=``, ``time_tile >= 1``.
+    """
+    if schedule == "stream" and backend != "pallas":
+        raise ValueError(
+            "schedule='stream' is a pallas dataflow schedule; backend "
+            f"{backend!r} has no streaming lowering. Valid combinations: "
+            "schedule='block' with any backend (local or mesh=), or "
+            "schedule='stream' with backend='pallas' (local or mesh=, "
+            "time_tile >= 1)")
+
+
 @dataclasses.dataclass
 class CompiledStencil:
     program: Program
@@ -162,8 +185,11 @@ def compile_program(p: Program, grid, *,
     input element is fetched from HBM once per sweep — see
     :mod:`repro.core.dataflow` / :mod:`repro.core.lower_stream`).  ``None``
     keeps the plan's schedule (``"block"`` for heuristic plans; tuned plans
-    carry whichever schedule measured fastest).  Streaming is
-    pallas-only and not yet available under a mesh.
+    carry whichever schedule measured fastest).  Streaming is pallas-only
+    and composes with ``mesh=``: each shard sweeps the stream axis over
+    its local block, halo refresh stays inside the fused-loop carry, and a
+    sharded stream axis gets exact (chain-deepened) neighbour ghost planes
+    (see :func:`_check_schedule` for the supported combinations).
 
     ``strategy="tuned"`` replaces the ``auto_plan`` heuristic with the
     measured search of :mod:`repro.core.tune`: the persistent plan cache is
@@ -193,6 +219,7 @@ def compile_program(p: Program, grid, *,
         raise ValueError(f"grid rank {len(grid)} != program ndim {p.ndim}")
     if backend not in _BACKENDS:
         raise ValueError(f"unknown backend {backend!r}")
+    _check_schedule(backend, schedule)
     if time_tile is not None:
         time_tile = int(time_tile)
         if time_tile < 1:
@@ -261,19 +288,27 @@ def compile_program(p: Program, grid, *,
 
     graph = None
     group_halos = None
+    stream_axis = None
     if plan.schedule == "stream":
-        if backend != "pallas":
-            raise ValueError(
-                f"schedule='stream' is a pallas dataflow schedule; backend "
-                f"{backend!r} has no streaming lowering")
-        if mesh is not None:
-            raise ValueError(
-                "schedule='stream' is not yet supported under a mesh: the "
-                "shift-register sweep would cross shard boundaries on the "
-                "stream axis; use schedule='block' for SPMD runs")
+        _check_schedule(backend, plan.schedule)
+        if plan.time_tile > 1 and not getattr(update, "_plane_local", True):
+            # chained stages run the update inside the kernel on resident
+            # planes; an update that reads the whole grid (e.g. the serving
+            # layer's bucket refresh) has no plane-local form, so the chain
+            # demotes to 1 — the step-level analog of chain_split_reason
+            plan = dataclasses.replace(plan, time_tile=1)
+        stream_axis = dataflow.STREAM_AXIS
+        # a mesh that decomposes the sweep axis needs exact, chain-deepened
+        # ghost planes on the lo side — the dataflow graph carries that
+        stream_sharded = (
+            mesh is not None
+            and mesh_axes[stream_axis] is not None
+            and int(mesh.shape[mesh_axes[stream_axis]]) > 1)
         # legalise fusion + size the shift registers once; carry sizing,
-        # the plan's cached StreamSpec and the kernels all share it
-        graph = dataflow.lower_to_dataflow(p, plan, plan_grid)
+        # the shard spec, the plan's cached StreamSpec and the kernels all
+        # share it
+        graph = dataflow.lower_to_dataflow(p, plan, plan_grid,
+                                           stream_sharded=stream_sharded)
         plan = dataclasses.replace(plan, stream=graph.spec())
         # chain-accumulated when the graph temporal-blocks: the fused-loop
         # carry must cover what the chained kernels slice per sweep
@@ -281,11 +316,14 @@ def compile_program(p: Program, grid, *,
 
     shard = None
     if mesh is not None:
-        # halo inference per fuse group is shared by the shard spec and the
-        # time-loop carry sizing — compute it once
-        group_halos = [infer_halo(p, grp) for grp in plan.groups]
+        # halo inference per kernel is shared by the shard spec and the
+        # time-loop carry sizing — compute it once (stream plans produced
+        # theirs above, ghost-exact and chain-deepened)
+        if group_halos is None:
+            group_halos = [infer_halo(p, grp) for grp in plan.groups]
         shard = make_shard_spec(p, plan, grid, mesh, mesh_axes,
-                                group_halos=group_halos)
+                                group_halos=group_halos,
+                                stream_axis=stream_axis)
 
     time_spec = None
     if steps is not None:
@@ -297,7 +335,8 @@ def compile_program(p: Program, grid, *,
                                    group_halos=group_halos)
         if mesh is not None:
             raw = distribute.lower_sharded_time_loop(p, plan, grid,
-                                                     time_spec, update, mesh)
+                                                     time_spec, update, mesh,
+                                                     graph=graph)
         elif plan.schedule == "stream":
             raw = lower_stream.lower_time_loop(p, plan, grid, time_spec,
                                                update, graph=graph)
@@ -308,7 +347,8 @@ def compile_program(p: Program, grid, *,
             raw = lower_jnp.lower_time_loop(p, backend.removeprefix("jnp_"),
                                             time_spec, update)
     elif mesh is not None:
-        raw = distribute.lower_sharded(p, plan, grid, shard, mesh)
+        raw = distribute.lower_sharded(p, plan, grid, shard, mesh,
+                                       graph=graph)
     elif plan.schedule == "stream":
         raw = lower_stream.lower(p, plan, grid, graph=graph)
     elif backend == "pallas":

@@ -302,15 +302,32 @@ def bucket_for(p: Program, grid: Sequence[int], *,
     return BucketSpec(grid=grid, bucket=tuple(bucket), offset=tuple(offset))
 
 
+def mesh_fingerprint(mesh, mesh_axes) -> str:
+    """Stable encoding of a mesh topology for cache keys.
+
+    Two topologies of the same device count (2x4 vs 4x2, or different
+    grid-axis assignments) shard different local blocks and measure
+    different collectives — plans and executors compiled under one must
+    never serve the other.  ``"none"`` = unsharded/local."""
+    if mesh is None:
+        return "none"
+    axes = tuple(mesh_axes if mesh_axes is not None else mesh.axis_names)
+    return ",".join(f"{a or '-'}:{1 if a is None else int(mesh.shape[a])}"
+                    for a in axes)
+
+
 def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
                        backend: str, dtype: str = "float32",
                        interpret: bool = True, schedule: str | None = None,
-                       steps: int | None = None) -> str:
+                       steps: int | None = None,
+                       mesh=None, mesh_axes=None) -> str:
     """Cache key of one serving-bucket executor: program semantics
     (boundaries included, via :func:`program_fingerprint`), bucket shape,
-    backend/compile options, fused depth, and the plan schema version — a
-    record written by another plan layout must read as a miss, never as a
-    silently misdecoded plan."""
+    backend/compile options, fused depth, mesh topology
+    (:func:`mesh_fingerprint` — a sharded executor must never serve a
+    local request or a different topology), and the plan schema version —
+    a record written by another plan layout must read as a miss, never as
+    a silently misdecoded plan."""
     return "|".join([
         "serve",
         program_fingerprint(p),
@@ -320,6 +337,7 @@ def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
         f"interpret={int(bool(interpret))}",
         f"schedule={schedule or 'plan'}",
         f"steps={'single' if steps is None else int(steps)}",
+        f"mesh={mesh_fingerprint(mesh, mesh_axes)}",
         f"schema={PLAN_SCHEMA_VERSION}",
     ])
 
@@ -413,17 +431,31 @@ class ShardSpec:
     global_grid: tuple
     # field -> (ndim, 2) halo depth of the worst consuming fuse group
     field_halo: dict
+    # the plan's stream axis (schedule="stream"; None for block plans).
+    # When this axis is itself sharded, the per-shard sweep needs exact,
+    # chain-deepened lo-side ghost planes (see dataflow.stream_halo) — the
+    # field halos above already price them.
+    stream_axis: int | None = None
 
     def axis_size(self, ax: int) -> int:
         name = self.mesh_axes[ax]
         return 1 if name is None else int(self.axis_sizes[name])
 
+    @property
+    def stream_sharded(self) -> bool:
+        """True when the plan streams over an axis the mesh decomposes."""
+        return (self.stream_axis is not None
+                and self.axis_size(self.stream_axis) > 1)
+
     def describe(self) -> str:
         parts = []
         for ax, name in enumerate(self.mesh_axes):
             parts.append(f"{name or '-'}:{self.axis_size(ax)}")
+        stream = ("" if self.stream_axis is None
+                  else f", stream_axis={self.stream_axis}"
+                       f"{'/sharded' if self.stream_sharded else ''}")
         return (f"shard(mesh=[{','.join(parts)}], local={self.local_grid}, "
-                f"global={self.global_grid})")
+                f"global={self.global_grid}{stream})")
 
 
 def normalize_mesh_axes(mesh_axes: Sequence, ndim: int) -> tuple:
@@ -450,20 +482,26 @@ def shard_local_grid(global_grid: Sequence[int], mesh, mesh_axes: Sequence
 
 def make_shard_spec(p: Program, plan: DataflowPlan, global_grid: Sequence[int],
                     mesh, mesh_axes: Sequence,
-                    group_halos: list | None = None) -> ShardSpec:
+                    group_halos: list | None = None,
+                    stream_axis: int | None = None) -> ShardSpec:
     """Build the :class:`ShardSpec` for ``plan`` over ``mesh``.
 
     Halo exchange is single-hop (each shard talks to its immediate
     neighbours), so a field's halo may not exceed the local extent of a
     sharded axis — violations raise here, at plan time, not inside the
     traced loop.  Pass ``group_halos`` (one :func:`infer_halo` result per
-    fuse group) to reuse halos the caller already computed.
+    fuse group, or the stream graph's chain-accumulated region halos) to
+    reuse halos the caller already computed.  ``stream_axis`` records the
+    plan's sweep axis for stream plans: sharding it is supported — the
+    ``group_halos`` must then carry the deepened ghost-plane reach, and a
+    sweep (plus temporal chain) too deep for the local block fails the
+    single-hop check here with the mesh/time_tile levers named.
     """
     ndim = p.ndim
     mesh_axes = normalize_mesh_axes(mesh_axes, ndim)
     local_grid = shard_local_grid(global_grid, mesh, mesh_axes)
     if group_halos is None:
-        group_halos = [infer_halo(p, grp) for grp in plan.groups]
+        group_halos = plan_group_halos(p, plan)
     field_halo = {}
     for gh in group_halos:
         for f in gh.group_inputs:
@@ -476,15 +514,20 @@ def make_shard_spec(p: Program, plan: DataflowPlan, global_grid: Sequence[int],
             continue
         for f, h in field_halo.items():
             if max(int(h[ax, 0]), int(h[ax, 1])) > local_grid[ax]:
+                lever = ("coarsen the mesh axis "
+                         f"{name!r} or enlarge the grid")
+                if ax == stream_axis:
+                    lever = (f"coarsen the mesh axis {name!r}, shallow the "
+                             "time_tile chain, or leave the stream axis "
+                             "unsharded")
                 raise ValueError(
                     f"halo of field {f!r} on axis {ax} "
                     f"({int(h[ax, 0])},{int(h[ax, 1])}) exceeds the local "
-                    f"extent {local_grid[ax]}; coarsen the mesh axis "
-                    f"{name!r} or enlarge the grid")
+                    f"extent {local_grid[ax]}; {lever}")
     return ShardSpec(mesh_axes=mesh_axes, axis_sizes=axis_sizes,
                      local_grid=local_grid,
                      global_grid=tuple(int(g) for g in global_grid),
-                     field_halo=field_halo)
+                     field_halo=field_halo, stream_axis=stream_axis)
 
 
 @dataclasses.dataclass
@@ -611,16 +654,20 @@ def plan_time_loop(p: Program, plan: DataflowPlan, grid: Sequence[int],
                         shard=shard)
 
 
-def plan_group_halos(p: Program, plan: DataflowPlan) -> list:
+def plan_group_halos(p: Program, plan: DataflowPlan,
+                     stream_sharded: bool = False) -> list:
     """One :class:`~repro.core.passes.GroupHalo` per executed kernel of
     ``plan`` — block-schedule fuse groups via :func:`infer_halo`, stream
     regions (post-legalisation, with shift-register stream-axis halos, and
     reach accumulated over the chained steps when ``time_tile > 1``) via
-    the dataflow layer.  Every carry/shard sizing goes through here so the
-    padding always matches what the lowered kernels will slice."""
+    the dataflow layer.  ``stream_sharded`` deepens the stream-axis lo
+    halos for a mesh that decomposes the sweep axis.  Every carry/shard
+    sizing goes through here so the padding always matches what the
+    lowered kernels will slice."""
     if plan.schedule == "stream":
         from .dataflow import lower_to_dataflow
-        return lower_to_dataflow(p, plan).group_halos()
+        return lower_to_dataflow(
+            p, plan, stream_sharded=stream_sharded).group_halos()
     return [infer_halo(p, grp) for grp in plan.groups]
 
 

@@ -51,8 +51,8 @@ import numpy as np
 from .. import hw
 from .ir import Program
 from .schedule import (PLAN_SCHEMA_VERSION, DataflowPlan, auto_plan,
-                       plan_from_dict, plan_to_dict, program_fingerprint,
-                       vmem_cost)
+                       mesh_fingerprint, plan_from_dict, plan_to_dict,
+                       program_fingerprint, vmem_cost)
 
 __all__ = [
     "TuneConfig", "PlanCache", "TuneResult", "cache_key", "tune_plan",
@@ -197,16 +197,12 @@ class PlanCache:
 
 
 def _mesh_tag(mesh, mesh_axes) -> str:
-    """Stable encoding of the mesh topology a plan was tuned under.
-
-    Two topologies of the same device count (2x4 vs 4x2, or different
-    grid-axis assignments) shard different local blocks and measure
-    different collectives — their tuned plans must not serve each other."""
-    if mesh is None:
-        return "none"
-    axes = tuple(mesh_axes or ())
-    return ",".join(f"{a or '-'}:{1 if a is None else int(mesh.shape[a])}"
-                    for a in axes)
+    """Stable encoding of the mesh topology a plan was tuned under (the
+    shared :func:`~repro.core.schedule.mesh_fingerprint`): topologies of
+    the same device count (2x4 vs 4x2, or different grid-axis assignments)
+    shard different local blocks and measure different collectives — their
+    tuned plans must not serve each other."""
+    return mesh_fingerprint(mesh, mesh_axes)
 
 
 def cache_key(p: Program, grid: Sequence[int], backend: str,
@@ -312,8 +308,7 @@ def _behaviour_key(plan: DataflowPlan, carry_write: str, backend: str,
 
 
 def _candidates(p: Program, grid, backend: str, interpret: bool,
-                dtype: str, cfg: TuneConfig, with_loop: bool,
-                allow_stream: bool = True) -> list:
+                dtype: str, cfg: TuneConfig, with_loop: bool) -> list:
     ndim = p.ndim
     out: list[_Candidate] = []
     seen: set = set()
@@ -349,7 +344,7 @@ def _candidates(p: Program, grid, backend: str, interpret: bool,
         # apply — the non-stream axes are resident whole) x temporal-chain
         # depth (fused-loop mode only; depths legalised to the same
         # effective chain dedup via the behaviour key)
-        if allow_stream and backend == "pallas" and ndim >= 2:
+        if backend == "pallas" and ndim >= 2:
             tiles = tuple(cfg.time_tiles) if with_loop else (1,)
             for tt in tiles:
                 plan_s = auto_plan(p, grid, backend=backend,
@@ -451,10 +446,12 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
     timer = cfg.timer or _default_timer_factory(cfg.warmup, cfg.repeats)
     with_loop = update is not None
 
-    # streams are single-device for now: a sharded sweep would cross shard
-    # boundaries on the stream axis, so under a mesh only blocks compete
+    # stream candidates compete under a mesh too: each shard sweeps its
+    # local block (with exact neighbour ghost planes when the stream axis
+    # itself is sharded), so ``plan_grid`` prices VMEM and the roofline
+    # per shard and the measurement runs the real shard_map executable
     cands = _candidates(p, plan_grid, backend, interpret, dtype, cfg,
-                        with_loop, allow_stream=mesh is None)
+                        with_loop)
     baseline, rest = cands[0], cands[1:]
 
     # prune: VMEM feasibility on the local block (carry-aware when tuning

@@ -140,26 +140,38 @@ def make_refresh(p: Program, spec: BucketSpec):
     ``_srv_n*`` scalars so the gather/mask shapes are static (bucket-sized)
     while the wrap length is traced — one trace covers every grid in the
     bucket, and ``vmap`` batches requests with different sizes.
+
+    Under ``shard_map`` the refresh sees *local* shards; ``origin`` (the
+    shard's global offset vector) shifts the zero-boundary masks into
+    global coordinates.  The periodic gather is a whole-axis permutation
+    with no shard-local form, so periodic fields reject a non-None origin.
     """
     bnd = p.boundaries()
     names = size_scalar_names(p.ndim)
     offs = tuple(int(o) for o in spec.offset)
     bucket = tuple(int(b) for b in spec.bucket)
 
-    def refresh(fields, scalars):
+    def refresh(fields, scalars, origin=None):
         ns = [jnp.asarray(scalars[nm]).astype(jnp.int32) for nm in names]
         out = {}
         for f, x in fields.items():
             if bnd.get(f) == "periodic":
+                if origin is not None:
+                    raise NotImplementedError(
+                        f"periodic field {f!r}: the bucket refresh is a "
+                        "global torus gather with no shard-local form; "
+                        "serve periodic fused loops unsharded")
                 for a in range(p.ndim):
                     idx = offs[a] + (jnp.arange(bucket[a]) - offs[a]) % ns[a]
                     x = jnp.take(x, idx, axis=a)
             else:
                 for a in range(p.ndim):
-                    i = jnp.arange(bucket[a])
+                    i = jnp.arange(x.shape[a])
+                    if origin is not None:
+                        i = i + origin[a]
                     inb = (i >= offs[a]) & (i < offs[a] + ns[a])
                     shape = [1] * p.ndim
-                    shape[a] = bucket[a]
+                    shape[a] = x.shape[a]
                     x = jnp.where(inb.reshape(shape), x, 0)
             out[f] = x
         return out
@@ -178,12 +190,18 @@ def wrap_update(p: Program, spec: BucketSpec, update, trace_counter=None):
     user = adapt_update(update)
     refresh = make_refresh(p, spec)
 
-    def wrapped(fields, outputs, scalars):
+    def wrapped(fields, outputs, scalars, origin=None):
         if trace_counter is not None:
             trace_counter[0] += 1
         new = dict(fields)
         new.update(user(fields, outputs, scalars))
-        return refresh(new, scalars)
+        return refresh(new, scalars, origin)
 
     wrapped._takes_scalars = True
+    # sharded time loops feed the shard's global offset so the refresh
+    # masks in global coordinates
+    wrapped._takes_origin = True
+    # the refresh gathers across whole bucket axes — there is no plane-local
+    # form, so stream compiles must not chain this update into the kernel
+    wrapped._plane_local = False
     return wrapped

@@ -26,6 +26,7 @@ thread, so executors and stats need no locking of their own.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -144,30 +145,78 @@ class StencilEngine:
     ``autostart=False`` leaves the worker thread unstarted (requests queue
     up; call :meth:`start` to begin draining — used by the bounded-queue
     tests and by callers that want to pre-fill a batch).
+
+    Compile knobs may arrive loose (``backend=``, ``schedule=``, ``mesh=``
+    + ``mesh_axes=``, ``time_tile=``, ...) or bundled in an
+    ``options=CompileOptions(...)``; the options object seeds any knob the
+    caller left at its engine default, and a knob set both ways with
+    different values is an error.  ``mesh=`` makes every executor a
+    sharded (``shard_map``) executable — the mesh topology is part of
+    :func:`~repro.core.schedule.bucket_fingerprint`, so the same program
+    served on different meshes occupies distinct executor-table entries
+    and plan records.  ``max_executors=`` puts an LRU cap on the executor
+    table: lookups refresh recency, an insert over the cap evicts the
+    coldest executor (and the jitted traces it holds), counted in
+    ``stats.evictions``.
     """
+
+    #: compile knobs the engine shares with :class:`CompileOptions`; an
+    #: ``options=`` object seeds these, loose kwargs override (a loose
+    #: kwarg moved off its engine default that *disagrees* with the
+    #: options value is an error, mirroring ``compile_program``).
+    _OPTION_KNOBS = (("backend", "jnp_fused"), ("interpret", True),
+                     ("schedule", None), ("strategy", "auto"),
+                     ("dtype", "float32"), ("mesh", None),
+                     ("mesh_axes", None), ("time_tile", None))
 
     def __init__(self, *, backend: str = "jnp_fused", interpret: bool = True,
                  schedule: str | None = None, strategy: str = "auto",
-                 dtype: str = "float32", max_batch: int = 8,
+                 dtype: str = "float32", mesh=None,
+                 mesh_axes: tuple | None = None, time_tile: int | None = None,
+                 options: CompileOptions | None = None, max_batch: int = 8,
                  window_s: float = 0.002, queue_depth: int = 64,
+                 max_executors: int | None = None,
                  plan_cache: PlanCache | None = None, lane: int = hw.LANE,
                  autostart: bool = True):
-        self.backend = backend
-        self.interpret = interpret
-        self.schedule = schedule
-        self.strategy = strategy
-        self.dtype = dtype
+        loose = dict(backend=backend, interpret=interpret, schedule=schedule,
+                     strategy=strategy, dtype=dtype, mesh=mesh,
+                     mesh_axes=mesh_axes, time_tile=time_tile)
+        co_defaults = {f.name: f.default
+                       for f in dataclasses.fields(CompileOptions)}
+        for name, default in self._OPTION_KNOBS:
+            val = loose[name]
+            if options is not None:
+                oval = getattr(options, name)
+                if val == default:
+                    val = oval      # options seeds every untouched knob
+                elif oval != co_defaults[name] and oval != val:
+                    raise ValueError(
+                        f"{name} passed both ways with different values: "
+                        f"engine {name}={val!r} vs options.{name}={oval!r}")
+            setattr(self, name, val)
+        if self.mesh is not None and self.mesh_axes is None:
+            raise ValueError("mesh= requires mesh_axes= (one entry per grid "
+                             "axis; None leaves an axis unsharded)")
         self.max_batch = int(max_batch)
         self.window_s = float(window_s)
+        self.max_executors = (None if max_executors is None
+                              else int(max_executors))
+        if self.max_executors is not None and self.max_executors < 1:
+            raise ValueError("max_executors must be >= 1 (or None for "
+                             "unbounded)")
         self.plan_cache = plan_cache
         self.lane = int(lane)
         self.stats = ServeStats()
         self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
-        self._executors: dict = {}
+        # LRU over compiled buckets: hits refresh recency, inserts evict
+        # the coldest entry once over ``max_executors``.  Evicting an
+        # executor also drops its jitted traces (the batched/unbatched
+        # callables it holds), so the cap bounds the trace cache too.
+        self._executors: collections.OrderedDict = collections.OrderedDict()
         self._traces = [0]
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
-        self._np_dtype = np.dtype(dtype)
+        self._np_dtype = np.dtype(self.dtype)
         if autostart:
             self.start()
 
@@ -215,6 +264,18 @@ class StencilEngine:
         p = req.program
         if req.boundary is not None:
             p = p.with_boundary(req.boundary)
+        if req.steps is not None and self.mesh is not None and any(
+                self.mesh_axes[a] is not None
+                and int(self.mesh.shape[self.mesh_axes[a]]) > 1
+                for a in range(p.ndim)):
+            per = sorted(f for f in p.input_fields()
+                         if p.boundaries().get(f) == "periodic")
+            if per:
+                raise ValueError(
+                    f"fused serving of periodic fields {per} under mesh= is "
+                    "not supported: the bucket refresh is a global torus "
+                    "gather with no shard-local form; serve them unsharded "
+                    "or use boundary='zero'")
         sp = serving_program(p)
         missing = set(sp.input_fields()) - set(req.fields)
         if missing:
@@ -230,7 +291,8 @@ class StencilEngine:
         key = "|".join([
             bucket_fingerprint(sp, spec.bucket, backend=self.backend,
                                dtype=self.dtype, interpret=self.interpret,
-                               schedule=self.schedule, steps=req.steps),
+                               schedule=self.schedule, steps=req.steps,
+                               mesh=self.mesh, mesh_axes=self.mesh_axes),
             f"update={ukey}",
             f"jax={jax.__version__}",
         ])
@@ -299,11 +361,16 @@ class StencilEngine:
         try:
             if key in self._executors:
                 self.stats.exec_hits += len(live)
+                self._executors.move_to_end(key)      # refresh LRU recency
                 ex = self._executors[key]
             else:
                 self.stats.exec_misses += len(live)
                 ex = self._build_executor(key, live[0])
                 self._executors[key] = ex
+                while (self.max_executors is not None
+                       and len(self._executors) > self.max_executors):
+                    self._executors.popitem(last=False)
+                    self.stats.evictions += 1
         except Exception as e:  # compile/planning failure fails the group
             for it in live:
                 self.stats.failed += 1
@@ -335,7 +402,8 @@ class StencilEngine:
                 interpret=self.interpret, dtype=self.dtype,
                 strategy=self.strategy, steps=req.steps, update=update,
                 carry_write=carry_write, schedule=self.schedule,
-                plan_cache=self.plan_cache))
+                mesh=self.mesh, mesh_axes=self.mesh_axes,
+                time_tile=self.time_tile, plan_cache=self.plan_cache))
         self.stats.compiles += 1
         cw = ex.time_spec.carry_write if ex.time_spec is not None else "repad"
         if self.plan_cache is not None and not record_hit:

@@ -24,6 +24,8 @@ class ServeStats:
     # PlanCache serve-record hits vs misses on executor build
     plan_hits: int = 0
     plan_misses: int = 0
+    # LRU evictions from the executor table (``max_executors`` cap)
+    evictions: int = 0
 
     traces: int = 0          # update-rule traces observed (0 when warm)
     compiles: int = 0        # executor builds that ran compile_program

@@ -334,3 +334,107 @@ def test_stale_schema_serve_record_misses_cleanly(tmp_path):
         assert read_serve_record(cache.lookup(key)) is not None
     finally:
         eng.close()
+
+
+# --------------------------------------------------------------------------
+# LRU executor cap + CompileOptions / mesh plumbing
+# --------------------------------------------------------------------------
+
+def test_executor_lru_evicts_coldest():
+    p = pw_advection()
+    grids = [(8, 8, 16), (8, 8, 40), (8, 8, 70)]      # three distinct buckets
+    with StencilEngine(window_s=0.0, max_executors=2) as eng:
+        eng.run(make_request(p, grids[0], seed=0), timeout=300)
+        eng.run(make_request(p, grids[1], seed=0), timeout=300)
+        assert eng.stats.evictions == 0 and len(eng._executors) == 2
+        # touch bucket 0 so bucket 1 is the coldest, then overflow
+        eng.run(make_request(p, grids[0], seed=1), timeout=300)
+        eng.run(make_request(p, grids[2], seed=0), timeout=300)
+        assert eng.stats.evictions == 1 and len(eng._executors) == 2
+        misses = eng.stats.exec_misses
+        # the refreshed bucket survived; the cold one was evicted
+        eng.run(make_request(p, grids[0], seed=2), timeout=300)
+        assert eng.stats.exec_misses == misses
+        eng.run(make_request(p, grids[1], seed=1), timeout=300)
+        assert eng.stats.exec_misses == misses + 1    # rebuilt after eviction
+        assert eng.stats.evictions == 2
+        assert eng.stats.snapshot()["evictions"] == 2
+
+
+def test_engine_accepts_compile_options():
+    from repro.core.pipeline import CompileOptions
+
+    # options seeds every knob the caller left at its engine default
+    eng = StencilEngine(options=CompileOptions(schedule="block",
+                                               dtype="float32",
+                                               interpret=False),
+                        autostart=False)
+    assert eng.schedule == "block" and eng.interpret is False
+    # a knob moved off its engine default that disagrees is an error
+    with pytest.raises(ValueError, match="dtype"):
+        StencilEngine(dtype="bfloat16",
+                      options=CompileOptions(dtype="float64"),
+                      autostart=False)
+    # mesh= without mesh_axes= is rejected up front
+    from repro.dist.sharding import make_auto_mesh
+    with pytest.raises(ValueError, match="mesh_axes"):
+        StencilEngine(mesh=make_auto_mesh((1,), ("X",)), autostart=False)
+
+
+def test_engine_mesh_topology_keys_executors():
+    """The same request served under a mesh and locally must occupy
+    distinct executor-table entries (and the sharded answer must agree
+    with the local one — a 1x1 mesh runs on the single default device)."""
+    from repro.dist.sharding import make_auto_mesh
+    p = pw_advection()
+    req = make_request(p, (8, 8, 16), seed=0)
+    mesh = make_auto_mesh((1,), ("X",))
+    with StencilEngine(window_s=0.0, mesh=mesh,
+                       mesh_axes=("X", None, None)) as sharded, \
+            StencilEngine(window_s=0.0) as local:
+        _, _, ks = sharded.describe(req)
+        _, _, kl = local.describe(req)
+        assert ks != kl and "mesh=X:1" in ks and "mesh=none" in kl
+        rs = sharded.run(make_request(p, (8, 8, 16), seed=0), timeout=300)
+        rl = local.run(make_request(p, (8, 8, 16), seed=0), timeout=300)
+        for k in rl.outputs:
+            np.testing.assert_allclose(rs.outputs[k], rl.outputs[k],
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_engine_rejects_periodic_fused_under_sharded_mesh():
+    # subprocess: building an actually-sharded mesh needs >= 2 devices
+    import os
+    import subprocess
+    import sys
+    script = r"""
+import numpy as np
+from repro.apps.advection import pw_advection, pw_advection_update
+from repro.dist.sharding import make_auto_mesh
+from repro.serve import StencilEngine, StencilRequest
+p = pw_advection(boundary="periodic")
+grid = (8, 8, 16)
+rng = np.random.default_rng(0)
+req = StencilRequest(
+    program=p,
+    fields={f: rng.normal(size=grid).astype(np.float32) for f in ("u", "v", "w")},
+    scalars={s: 0.05 for s in p.scalars},
+    coeffs={c: np.ones(grid[ax], np.float32) for c, ax in p.coeffs.items()},
+    steps=3, update=pw_advection_update(), update_key="pw")
+eng = StencilEngine(mesh=make_auto_mesh((2,), ("X",)),
+                    mesh_axes=("X", None, None), autostart=False)
+try:
+    eng.describe(req)
+    raise SystemExit("periodic fused request under a sharded mesh not rejected")
+except ValueError as e:
+    assert "periodic" in str(e), e
+print("PERIODIC_REJECT_OK")
+"""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", script], env=env,
+                       capture_output=True, text=True, timeout=300)
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "PERIODIC_REJECT_OK" in r.stdout

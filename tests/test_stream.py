@@ -173,15 +173,23 @@ def test_stream_requires_pallas_backend():
                         schedule="stream")
 
 
-def test_stream_rejects_mesh():
+def test_stream_composes_with_degenerate_mesh():
+    # stream + mesh= is first-class; a 1x1 mesh must bit-match the local
+    # stream lowering (the sharded path constant-folds to the same graph)
+    from repro.dist.sharding import make_auto_mesh
     p = pw_advection()
-    plan = auto_plan(p, (8, 8, 32), schedule="stream")
-    mesh_err = None
-    try:
-        from repro.dist.sharding import make_auto_mesh
-        mesh = make_auto_mesh((1,), ("X",))
-        compile_program(p, (8, 8, 32), plan=plan, mesh=mesh,
-                        mesh_axes=("X", None, None))
-    except ValueError as e:
-        mesh_err = str(e)
-    assert mesh_err is not None and "mesh" in mesh_err
+    grid = (8, 8, 32)
+    plan = auto_plan(p, grid, schedule="stream")
+    rng = np.random.default_rng(3)
+    fields = {f: rng.normal(size=grid).astype(np.float32) * 0.1
+              for f in ("u", "v", "w")}
+    scalars = {"tcx": 0.05, "tcy": 0.05}
+    coeffs = {c: np.linspace(0.9, 1.1, grid[2]).astype(np.float32)
+              for c in ("tzc1", "tzc2", "tzd1", "tzd2")}
+    mesh = make_auto_mesh((1,), ("X",))
+    got = compile_program(p, grid, plan=plan, mesh=mesh,
+                          mesh_axes=("X", None, None))(fields, scalars,
+                                                       coeffs)
+    ref = compile_program(p, grid, plan=plan)(fields, scalars, coeffs)
+    for k in ref:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(ref[k])), k
