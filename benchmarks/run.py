@@ -78,12 +78,15 @@ def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.2f},{derived}", flush=True)
 
 
-def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
+def run_smoke(out_path: str, mesh_shape: tuple | None = None,
+              baseline_path: str | None = None) -> None:
     """Tiny fused-loop benchmark (16^3, 3 steps, interpret mode) -> JSON.
 
     With ``mesh_shape`` the sharded fused loop (one dispatch, ppermute
     halo exchange inside the carry) runs over a simulated device mesh and
-    contributes ``dist/...`` steps/sec rows to the artifact."""
+    contributes ``dist/...`` steps/sec rows to the artifact.  With
+    ``baseline_path`` the compute rows are gated against the committed
+    baseline (see :func:`check_smoke_baseline`)."""
     rows = []
 
     def emit_row(name: str, us: float, derived: str = ""):
@@ -113,6 +116,42 @@ def run_smoke(out_path: str, mesh_shape: tuple | None = None) -> None:
     with open(out_path, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {out_path} ({len(rows)} rows)", flush=True)
+    if baseline_path:
+        check_smoke_baseline(rows, baseline_path)
+
+
+def check_smoke_baseline(rows: list, baseline_path: str) -> None:
+    """Compute-row regression gate, mirroring the ``--serve`` one: every
+    ``steps_per_sec`` row in the committed baseline must appear in the
+    smoke artifact at no less than ``baseline * (1 - tolerance)`` steps/sec.
+    A baseline row missing from the artifact fails too — a silently renamed
+    or dropped row must not read as a pass."""
+    if not os.path.exists(baseline_path):
+        print(f"smoke baseline {baseline_path} missing; gate skipped",
+              flush=True)
+        return
+    base = json.load(open(baseline_path))
+    tol = float(base.get("tolerance", 0.30))
+    measured = {}
+    for row in rows:
+        derived = row.get("derived", "")
+        if derived.endswith("steps/s"):
+            measured[row["name"]] = float(derived.split()[0])
+    failures = []
+    for name, floor_sps in base.get("steps_per_sec", {}).items():
+        floor = float(floor_sps) * (1.0 - tol)
+        got = measured.get(name)
+        if got is None:
+            failures.append(f"  {name}: row missing from artifact")
+        elif got < floor:
+            failures.append(f"  {name}: {got:.2f} steps/s < {floor:.2f} "
+                            f"floor (baseline {float(floor_sps):.2f} "
+                            f"- {tol:.0%})")
+    if failures:
+        raise SystemExit("smoke compute-row regression:\n"
+                         + "\n".join(failures))
+    print(f"smoke baseline check OK: {len(base.get('steps_per_sec', {}))} "
+          f"rows within {tol:.0%} of {baseline_path}", flush=True)
 
 
 def run_schedule_rows(emit_row, grid: tuple, steps: int) -> None:
@@ -166,6 +205,22 @@ def run_schedule_rows(emit_row, grid: tuple, steps: int) -> None:
                  f"/fused_loop", dt * 1e6, f"{tsteps / dt:.2f} steps/s")
     emit_row(f"sched/pw_advection/{tag}/pallas/stream/t4_vs_t1", 0.0,
              f"{tiled[4] / tiled[1]:.2f}x time_tile=4 vs 1")
+
+    # spatial x temporal tile matrix: plane_tile=P advances P planes per
+    # sweep grid step (amortising per-step dispatch/window-shift overhead),
+    # composing with the T-deep temporal chain into one PxT tile
+    matrix = {}
+    for pt in (1, 4):
+        for tt in (1, 4):
+            dt = measure(CompileOptions(backend="pallas", steps=tsteps,
+                                        update=update, schedule="stream",
+                                        time_tile=tt, plane_tile=pt), tsteps)
+            matrix[pt, tt] = tsteps / dt
+            emit_row(f"sched/pw_advection/{tag}/pallas/stream"
+                     f"/plane_tile={pt}/time_tile={tt}/fused_loop",
+                     dt * 1e6, f"{tsteps / dt:.2f} steps/s")
+    emit_row(f"sched/pw_advection/{tag}/pallas/stream/p4_vs_p1", 0.0,
+             f"{matrix[4, 1] / matrix[1, 1]:.2f}x plane_tile=4 vs 1")
 
 
 def run_sharded_loop(emit_row, grid: tuple, steps: int,
@@ -437,6 +492,11 @@ def main() -> None:
                     default="benchmarks/serve_baseline.json",
                     help="baseline JSON for the --serve regression gate "
                          "(missing file skips the gate)")
+    ap.add_argument("--smoke-baseline", default=None,
+                    help="baseline JSON for the --smoke compute-row "
+                         "regression gate (omit to skip; simulated-mesh "
+                         "runs skew timings, so the CI gate only arms the "
+                         "unmeshed smoke job)")
     ap.add_argument("--out", default=None,
                     help="artifact path for --smoke / --tune / --serve "
                          "(default BENCH_smoke.json / BENCH_tune_smoke.json "
@@ -469,7 +529,8 @@ def main() -> None:
         run_serve(args.out or "BENCH_serve_smoke.json", args.serve_baseline)
         return
     if args.smoke:
-        run_smoke(args.out or "BENCH_smoke.json", mesh_shape=mesh_shape)
+        run_smoke(args.out or "BENCH_smoke.json", mesh_shape=mesh_shape,
+                  baseline_path=args.smoke_baseline)
         return
     fig4_throughput.run(emit)
     fig5_6_energy.run(emit)

@@ -33,6 +33,9 @@ ap.add_argument("--steps", type=int, default=10)
 ap.add_argument("--boundary", default="zero", choices=("zero", "periodic"))
 ap.add_argument("--time-tile", type=int, default=4,
                 help="temporal-blocking depth for the chained stream run")
+ap.add_argument("--plane-tile", type=int, default=4,
+                help="spatial-unrolling width for the plane-tiled stream "
+                     "run (P planes per sweep grid step)")
 args = ap.parse_args()
 
 if args.kernel == "pw":
@@ -79,12 +82,23 @@ for label, opts in (
     (f"stream/T={args.time_tile}",
      CompileOptions(schedule="stream", steps=args.steps, update=update,
                     time_tile=args.time_tile)),
+    (f"stream/P={args.plane_tile}",
+     CompileOptions(schedule="stream", steps=args.steps, update=update,
+                    plane_tile=args.plane_tile)),
+    (f"stream/P={args.plane_tile}/T={args.time_tile}",
+     CompileOptions(schedule="stream", steps=args.steps, update=update,
+                    time_tile=args.time_tile,
+                    plane_tile=args.plane_tile)),
 ):
     execs[label] = compile_program(p, grid, options=opts)
 tiled = execs[f"stream/T={args.time_tile}"]
 print(f"requested time_tile={args.time_tile}, effective "
       f"{tiled.plan.stream.time_tile} (legalisation demotes chains that "
       f"cross region splits or periodic wraps)")
+unrolled = execs[f"stream/P={args.plane_tile}"]
+print(f"requested plane_tile={args.plane_tile}, effective "
+      f"{unrolled.plan.stream.plane_tile} (legalisation demotes sweeps "
+      f"wider than the stream extent)")
 out = {s: ex(fields, scalars, coeffs) for s, ex in execs.items()}
 worst = max(float(np.abs(np.asarray(out[s][k])
                          - np.asarray(out["block"][k])).max())

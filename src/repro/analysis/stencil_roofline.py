@@ -30,6 +30,12 @@ from ..core.passes import infer_halo, live_ops, stage_split
 # v5e vector unit f32 throughput (8x128 lanes x FMA x ~0.94 GHz) — estimate
 VPU_F32_FLOPS = 7.5e12
 
+# Fixed cost of one stream-sweep grid step (window shift + DMA dispatch),
+# amortised by spatial unrolling: a ``plane_tile = P`` sweep pays it only
+# ``ceil(n_steps / P)`` times.  Rough estimate; it exists so the roofline
+# can *rank* P honestly, not to predict absolute seconds.
+STREAM_STEP_OVERHEAD_S = 5e-9
+
 
 @dataclasses.dataclass
 class StencilModel:
@@ -108,7 +114,7 @@ def plan_bytes_per_point(p: Program, plan, grid, graph=None) -> float:
     if getattr(plan, "schedule", "block") == "stream":
         if graph is None:
             from ..core.dataflow import lower_to_dataflow
-            graph = lower_to_dataflow(p, plan)
+            graph = lower_to_dataflow(p, plan, grid)
         T = max(1, int(getattr(graph, "time_tile", 1)))
         bytes_pp = 0.0
         # chained halos: the sweep's real fetch geometry under temporal
@@ -147,7 +153,7 @@ def _plan_flops_per_point(p: Program, plan, grid, graph=None) -> float:
     if getattr(plan, "schedule", "block") == "stream":
         if graph is None:
             from ..core.dataflow import lower_to_dataflow
-            graph = lower_to_dataflow(p, plan)
+            graph = lower_to_dataflow(p, plan, grid)
         T = max(1, int(getattr(graph, "time_tile", 1)))
         flops_pp = 0.0
         plane = np.asarray(grid[1:], dtype=np.int64)
@@ -198,12 +204,21 @@ def model_plan(p: Program, plan, grid) -> float:
     if getattr(plan, "schedule", "block") == "stream":
         # legalise once; both the bytes and flops terms consume it
         from ..core.dataflow import lower_to_dataflow
-        graph = lower_to_dataflow(p, plan)
+        graph = lower_to_dataflow(p, plan, grid)
     t_mem = (plan_bytes_per_point(p, plan, grid, graph=graph) * pts
              / hw.TPU_V5E.hbm_bandwidth)
     t_cmp = (_plan_flops_per_point(p, plan, grid, graph=graph) * pts
              / VPU_F32_FLOPS)
-    return max(t_mem, t_cmp)
+    t_step = 0.0
+    if graph is not None:
+        # per-grid-step sweep overhead, amortised P-fold by spatial
+        # unrolling and spread over the T time steps one sweep advances
+        T = max(1, int(getattr(graph, "time_tile", 1)))
+        P = max(1, int(getattr(graph, "plane_tile", 1)))
+        n_steps = int(grid[0])
+        t_step = (len(graph.regions) * -(-n_steps // P)
+                  * STREAM_STEP_OVERHEAD_S / T)
+    return max(t_mem, t_cmp) + t_step
 
 
 def modeled_energy_j(points: float, mpts: float,

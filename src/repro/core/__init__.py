@@ -5,7 +5,8 @@ from .frontend import (CoeffHandle, ExprHandle, FieldHandle, ProgramBuilder,
                        tanh, where)
 from .boundary import BOUNDARIES
 from .dataflow import (StreamGraph, StreamRegion, chain_split_reason,
-                       effective_time_tile, lower_to_dataflow)
+                       effective_plane_tile, effective_time_tile,
+                       lower_to_dataflow, plane_split_reason)
 from .ir import Program
 from .pipeline import (CompiledStencil, CompileOptions, compile_program,
                        run_time_loop)

@@ -55,6 +55,18 @@ sweeps), periodic persistent fields (the updated field's wraparound planes
 are not resident mid-sweep — the same rule that splits periodic temp
 back-references), or regions that do not see every persistent field (the
 update rule consumes them all).
+
+**Spatial unrolling** (``plan.plane_tile = P > 1``, the paper's parallel
+processing elements consuming multiple contiguous points per cycle): one
+sweep grid step DMAs and computes P consecutive planes, shrinking the
+sweep grid to ``ceil(n_steps / P)`` steps while keeping per-plane
+semantics identical — the window shifts by P planes at a time and every
+virtual step replays the single-plane pipeline.  Unlike the chain, plane
+unrolling is legality-free by construction (rings, coefficients and
+periodic wraparound all key off the *virtual* step), so the only demotion
+(:func:`plane_split_reason`, effective value on ``StreamSpec.plane_tile``)
+is geometric: P planes per step need at least P output planes in the
+(shard-local) stream extent.
 """
 
 from __future__ import annotations
@@ -141,12 +153,16 @@ class StreamGraph:
     ``time_tile`` is the *effective* temporal-blocking depth: the number of
     chained timestep stages one sweep advances (1 = no chaining, either
     because none was requested or because :func:`chain_split_reason` split
-    the chain back to single steps)."""
+    the chain back to single steps).  ``plane_tile`` is the *effective*
+    spatial-unrolling width: how many consecutive planes one sweep grid
+    step advances (1 = plane-by-plane, either because none was requested
+    or because :func:`plane_split_reason` demoted it)."""
 
     program: str
     axis: int
     regions: list
     time_tile: int = 1
+    plane_tile: int = 1
     # the stream axis is domain-decomposed across a mesh: region halos were
     # built with :func:`stream_halo`'s sharded lo-propagation (ghost planes
     # must be *exact*, not maskable out-of-domain warm-up), and chain
@@ -162,6 +178,7 @@ class StreamGraph:
             rings=tuple(dict(r.rings) for r in self.regions),
             leads=tuple(r.lead for r in self.regions),
             time_tile=self.time_tile,
+            plane_tile=self.plane_tile,
         )
 
     def group_halos(self) -> list:
@@ -175,8 +192,9 @@ class StreamGraph:
     def to_text(self) -> str:
         """HLS-dialect-style dump (docs, debugging, golden tests)."""
         tt = f" time_tile={self.time_tile}" if self.time_tile > 1 else ""
+        pt = f" plane_tile={self.plane_tile}" if self.plane_tile > 1 else ""
         lines = [f"dataflow.graph @{self.program} "
-                 f"stream_axis={self.axis}{tt} {{"]
+                 f"stream_axis={self.axis}{tt}{pt} {{"]
         for ri, r in enumerate(self.regions):
             lines.append(f"  dataflow.region @{ri} lead={r.lead} {{")
             for n in r.nodes:
@@ -291,6 +309,38 @@ def effective_time_tile(p: Program, regions: Sequence, requested: int) -> int:
     if requested == 1:
         return 1
     return 1 if chain_split_reason(p, regions) is not None else requested
+
+
+def plane_split_reason(p: Program, plane_tile: int,
+                       grid: Sequence[int] | None = None) -> str | None:
+    """Why ``P > 1`` planes cannot advance per sweep grid step (None = they
+    can).  Mirrors :func:`chain_split_reason`, one axis over: plane
+    unrolling replays the single-plane pipeline per *virtual* step, so
+    rings, coefficient reads and periodic wraparound are legal by
+    construction and the only constraint is geometric — a P-plane step
+    needs at least P output planes in the (shard-local) stream extent,
+    otherwise the whole sweep degenerates to warm-up/remainder handling."""
+    P = max(1, int(plane_tile))
+    if P == 1:
+        return None
+    if grid is not None and P > int(grid[STREAM_AXIS]):
+        return (f"plane_tile {P} exceeds the stream extent "
+                f"{int(grid[STREAM_AXIS])}: a sweep step would span more "
+                "planes than the (shard-local) domain holds")
+    return None
+
+
+def effective_plane_tile(p: Program, requested: int,
+                         grid: Sequence[int] | None = None) -> int:
+    """The plane-unroll width one sweep step can actually honour: the
+    requested ``plane_tile`` when :func:`plane_split_reason` allows it,
+    else 1.  With ``grid=None`` the geometric check is deferred (buffer
+    depths do not depend on it); callers that know the grid re-derive."""
+    requested = max(1, int(requested))
+    if requested == 1:
+        return 1
+    return 1 if plane_split_reason(p, requested, grid) is not None \
+        else requested
 
 
 def chained_halo(gh: GroupHalo, time_tile: int,
@@ -537,5 +587,7 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None,
             raise ValueError(f"grid rank {len(grid)} != ndim {p.ndim}")
     eff = effective_time_tile(p, region_ops,
                               getattr(plan, "time_tile", 1))
+    eff_p = effective_plane_tile(p, getattr(plan, "plane_tile", 1), grid)
     return StreamGraph(program=p.name, axis=STREAM_AXIS, regions=regions,
-                       time_tile=eff, stream_sharded=stream_sharded)
+                       time_tile=eff, plane_tile=eff_p,
+                       stream_sharded=stream_sharded)

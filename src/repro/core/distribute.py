@@ -314,12 +314,15 @@ def _pallas_calls(p: Program, plan: DataflowPlan, local_grid, global_grid,
     (``group_inputs``/``halo_lo``/``input_pad`` slicing/``origin=``), so
     the SPMD orchestrators below drive either schedule identically; a
     stream sweep additionally chains ``time_tile`` timestep stages when
-    the fused-loop ``update`` rule rides in-kernel."""
+    the fused-loop ``update`` rule rides in-kernel, and advances the
+    graph's effective ``plane_tile`` planes per grid step (demoted against
+    the *shard-local* stream extent by ``lower_to_dataflow``)."""
     if plan.schedule == "stream":
         return [build_stream_call(p, region, local_grid, dtype=jdtype,
                                   interpret=plan.interpret,
                                   global_extent=global_grid,
                                   time_tile=time_tile, update=update,
+                                  plane_tile=getattr(graph, "plane_tile", 1),
                                   stream_sharded=graph.stream_sharded)
                 for region in graph.regions]
     return [build_group_call(p, grp, plan.block, local_grid, dtype=jdtype,

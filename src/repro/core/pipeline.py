@@ -3,8 +3,14 @@
 The user-facing API (the role PSyclone's code-generation entry point plays):
 
     prog = pw_advection()
-    ex = compile_program(prog, grid=(64, 64, 128), backend="pallas")
+    ex = compile_program(prog, (64, 64, 128), options=CompileOptions(
+             backend="pallas"))
     out = ex(fields, scalars, coeffs)          # dict of output arrays
+
+``CompileOptions`` is a frozen dataclass — build a new value per
+configuration (``dataclasses.replace`` to vary one knob) rather than
+mutating; loose kwargs (``compile_program(prog, grid, backend="pallas")``)
+remain accepted and normalise to the same object.
 
 Backends:
     "pallas"     generated Pallas dataflow kernels (the paper's contribution)
@@ -50,6 +56,13 @@ class CompileOptions:
     (heuristic and tuned plans carry their own depth); an integer forces
     the requested depth, which stream legalisation may still demote to 1
     (see ``StreamSpec.time_tile``).
+
+    ``plane_tile`` is the spatial-unroll width: DMA + compute that many
+    consecutive planes per stream sweep grid step (requires
+    ``schedule="stream"``; unlike ``time_tile`` it needs no fused loop —
+    single-step sweeps unroll too).  ``None`` defers to the plan; an
+    integer forces the requested width, which geometry may still demote
+    to 1 (see ``StreamSpec.plane_tile``).
     """
 
     backend: str = "pallas"
@@ -68,6 +81,7 @@ class CompileOptions:
     boundary: object = None
     schedule: str | None = None
     time_tile: int | None = None
+    plane_tile: int | None = None
 
 
 _OPTION_DEFAULTS = {f.name: f.default
@@ -206,6 +220,13 @@ def compile_program(p: Program, grid, *,
     fetched from HBM once per T steps.  Requires ``steps``/``update``; the
     stream legaliser may demote the *effective* depth to 1 (recorded on
     ``plan.stream.time_tile``) when the program cannot chain.
+
+    ``plane_tile=P`` (spatial unrolling, stream schedule only) advances P
+    consecutive planes per sweep grid step: the sweep grid shrinks to
+    ``ceil(n_steps / P)`` and window buffers shift by P planes at a time.
+    Composes with ``time_tile`` (a P×T tile) and needs no fused loop; the
+    legaliser demotes the *effective* width to 1 (recorded on
+    ``plan.stream.plane_tile``) when P exceeds the shard-local extent.
     """
     o = _resolve_options(options, kwargs)
     backend, plan, jit, interpret = o.backend, o.plan, o.jit, o.interpret
@@ -213,6 +234,7 @@ def compile_program(p: Program, grid, *,
     carry_write, tune_config = o.carry_write, o.tune_config
     plan_cache, mesh, mesh_axes = o.plan_cache, o.mesh, o.mesh_axes
     boundary, schedule, time_tile = o.boundary, o.schedule, o.time_tile
+    plane_tile = o.plane_tile
 
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
@@ -229,6 +251,11 @@ def compile_program(p: Program, grid, *,
                 "time_tile > 1 pipelines T time steps through one stream "
                 "sweep, which applies the update rule in-kernel — it needs "
                 "the fused loop: pass steps=N and update=")
+    if plane_tile is not None:
+        plane_tile = int(plane_tile)
+        if plane_tile < 1:
+            raise ValueError(
+                f"plane_tile must be >= 1, got {plane_tile}")
     if boundary is not None:
         p = p.with_boundary(boundary)
 
@@ -259,7 +286,8 @@ def compile_program(p: Program, grid, *,
                              interpret=interpret, dtype=dtype,
                              strategy=strategy, steps=steps,
                              schedule=schedule or "block",
-                             time_tile=time_tile or 1)
+                             time_tile=time_tile or 1,
+                             plane_tile=plane_tile or 1)
     # plans can be shared (PlanCache entries, caller-held objects): the
     # compiled executable always gets its own deep copy, retargeted to the
     # requested backend/mesh, so no compile ever mutates another's plan
@@ -270,6 +298,8 @@ def compile_program(p: Program, grid, *,
         overrides["mesh_axes"] = mesh_axes
     if time_tile is not None and plan.time_tile != time_tile:
         overrides["time_tile"] = time_tile
+    if plane_tile is not None and plan.plane_tile != plane_tile:
+        overrides["plane_tile"] = plane_tile
     if schedule is not None and plan.schedule != schedule:
         # retargeting the schedule invalidates any cached stream geometry;
         # a stream plan's block is a degenerate one-plane placeholder, so
@@ -278,6 +308,7 @@ def compile_program(p: Program, grid, *,
         overrides.update(schedule=schedule, stream=None)
         if schedule == "block" and plan.schedule == "stream":
             overrides.setdefault("time_tile", 1)
+            overrides.setdefault("plane_tile", 1)
             overrides["block"] = auto_plan(
                 p, plan_grid, backend=backend, interpret=interpret,
                 dtype=plan.dtype, steps=steps).block

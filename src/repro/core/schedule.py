@@ -60,6 +60,12 @@ class StreamSpec:
       (:func:`repro.core.dataflow.chain_split_reason`) demotes it to 1 here
       when the chain cannot stream in one sweep (multiple regions, periodic
       wraparound, non-persistent inputs).
+    * ``plane_tile`` — the *effective* spatial-unroll width: how many
+      consecutive planes one sweep grid step DMAs and computes (the paper's
+      parallel processing elements consuming multiple contiguous points per
+      cycle).  The plan's ``plane_tile`` records the request;
+      :func:`repro.core.dataflow.plane_split_reason` demotes it to 1 here
+      when a P-plane step would overrun the (shard-local) stream extent.
     """
 
     axis: int = 0
@@ -68,6 +74,7 @@ class StreamSpec:
     rings: tuple = ()
     leads: tuple = ()
     time_tile: int = 1
+    plane_tile: int = 1
 
     def __post_init__(self):
         self.regions = tuple(tuple(int(i) for i in r) for r in self.regions)
@@ -77,6 +84,7 @@ class StreamSpec:
                            for d in self.rings)
         self.leads = tuple(int(v) for v in self.leads)
         self.time_tile = max(1, int(self.time_tile))
+        self.plane_tile = max(1, int(self.plane_tile))
 
 
 def stream_spec_to_dict(s: StreamSpec | None) -> dict | None:
@@ -89,6 +97,7 @@ def stream_spec_to_dict(s: StreamSpec | None) -> dict | None:
         "rings": [dict(d) for d in s.rings],
         "leads": list(s.leads),
         "time_tile": int(s.time_tile),
+        "plane_tile": int(s.plane_tile),
     }
 
 
@@ -100,7 +109,8 @@ def stream_spec_from_dict(d: dict | None) -> StreamSpec | None:
                       depths=d.get("depths", ()),
                       rings=d.get("rings", ()),
                       leads=d.get("leads", ()),
-                      time_tile=int(d.get("time_tile", 1)))
+                      time_tile=int(d.get("time_tile", 1)),
+                      plane_tile=int(d.get("plane_tile", 1)))
 
 
 @dataclasses.dataclass
@@ -135,6 +145,10 @@ class DataflowPlan:
     # the fused loop advances steps // T outer iterations).  Requested
     # depth; the legalised effective depth lives on ``stream.time_tile``.
     time_tile: int = 1
+    # spatial unrolling: DMA + compute P consecutive planes per stream
+    # sweep grid step (the grid shrinks to ceil(n_steps / P)).  Requested
+    # width; the effective width lives on ``stream.plane_tile``.
+    plane_tile: int = 1
 
     def __post_init__(self):
         if self.mesh_axes is not None:
@@ -151,6 +165,15 @@ class DataflowPlan:
                 "time_tile > 1 is temporal blocking through the stream "
                 "sweep; it requires schedule='stream' (the block schedule "
                 f"has no chained lowering), got schedule={self.schedule!r}")
+        self.plane_tile = int(self.plane_tile)
+        if self.plane_tile < 1:
+            raise ValueError(
+                f"plane_tile must be >= 1, got {self.plane_tile}")
+        if self.plane_tile > 1 and self.schedule != "stream":
+            raise ValueError(
+                "plane_tile > 1 is spatial unrolling of the stream sweep; "
+                "it requires schedule='stream' (the block schedule has no "
+                f"multi-plane sweep), got schedule={self.schedule!r}")
 
     def mesh_axes_for(self, ndim: int) -> tuple:
         """Mesh axis names normalised to ``ndim`` entries (None = unsharded)."""
@@ -160,8 +183,9 @@ class DataflowPlan:
         g = ", ".join("{" + ",".join(map(str, grp)) + "}" for grp in self.groups)
         ma = self.mesh_axes_for(len(self.block))
         tt = f", time_tile={self.time_tile}" if self.time_tile > 1 else ""
+        pt = f", plane_tile={self.plane_tile}" if self.plane_tile > 1 else ""
         return (f"plan(groups=[{g}], block={self.block}, backend={self.backend}, "
-                f"schedule={self.schedule}{tt}, mesh_axes={ma})")
+                f"schedule={self.schedule}{tt}{pt}, mesh_axes={ma})")
 
 
 # --------------------------------------------------------------------------
@@ -171,11 +195,12 @@ class DataflowPlan:
 #: Version of the serialised plan layout.  Bumped whenever a field is added
 #: or its meaning changes (v2: ``schedule`` + ``StreamSpec``; v3: temporal
 #: blocking — ``time_tile`` on the plan and the effective depth on the
-#: stream spec).  Deserialising is tolerant — unknown keys are ignored,
-#: missing new keys get their defaults — so the version mainly lets cache
-#: layers treat *stale* records as misses rather than guessing at their
-#: semantics.
-PLAN_SCHEMA_VERSION = 3
+#: stream spec; v4: spatial unrolling — ``plane_tile`` on the plan and the
+#: effective width on the stream spec).  Deserialising is tolerant —
+#: unknown keys are ignored, missing new keys get their defaults — so the
+#: version mainly lets cache layers treat *stale* records as misses rather
+#: than guessing at their semantics.
+PLAN_SCHEMA_VERSION = 4
 
 
 def plan_to_dict(plan: DataflowPlan) -> dict:
@@ -193,6 +218,7 @@ def plan_to_dict(plan: DataflowPlan) -> dict:
         "schedule": plan.schedule,
         "stream": stream_spec_to_dict(plan.stream),
         "time_tile": int(plan.time_tile),
+        "plane_tile": int(plan.plane_tile),
     }
 
 
@@ -213,6 +239,7 @@ def plan_from_dict(d: dict) -> DataflowPlan:
         schedule=d.get("schedule", "block"),
         stream=stream_spec_from_dict(d.get("stream")),
         time_tile=int(d.get("time_tile", 1)),
+        plane_tile=int(d.get("plane_tile", 1)),
     )
 
 
@@ -320,14 +347,16 @@ def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
                        backend: str, dtype: str = "float32",
                        interpret: bool = True, schedule: str | None = None,
                        steps: int | None = None,
-                       mesh=None, mesh_axes=None) -> str:
+                       mesh=None, mesh_axes=None,
+                       plane_tile: int | None = None) -> str:
     """Cache key of one serving-bucket executor: program semantics
     (boundaries included, via :func:`program_fingerprint`), bucket shape,
-    backend/compile options, fused depth, mesh topology
-    (:func:`mesh_fingerprint` — a sharded executor must never serve a
-    local request or a different topology), and the plan schema version —
-    a record written by another plan layout must read as a miss, never as
-    a silently misdecoded plan."""
+    backend/compile options, fused depth, requested sweep unroll width
+    (``plane_tile`` — executors with different sweep geometry never share
+    a slot), mesh topology (:func:`mesh_fingerprint` — a sharded executor
+    must never serve a local request or a different topology), and the
+    plan schema version — a record written by another plan layout must
+    read as a miss, never as a silently misdecoded plan."""
     return "|".join([
         "serve",
         program_fingerprint(p),
@@ -337,6 +366,7 @@ def bucket_fingerprint(p: Program, bucket: Sequence[int], *,
         f"interpret={int(bool(interpret))}",
         f"schedule={schedule or 'plan'}",
         f"steps={'single' if steps is None else int(steps)}",
+        f"plane_tile={'plan' if plane_tile is None else int(plane_tile)}",
         f"mesh={mesh_fingerprint(mesh, mesh_axes)}",
         f"schema={PLAN_SCHEMA_VERSION}",
     ])
@@ -731,12 +761,19 @@ def _vmem_cost_stream(p: Program, plan: DataflowPlan, grid: tuple,
     field at its own (shrinking) stage extent, and each stage's op planes
     carry the stage's accumulated margin.  Pricing only the T=1 geometry
     here would admit chained plans that overflow scratch at run time.
+
+    With spatial unrolling (effective ``plane_tile = P > 1``) each sweep
+    grid step stages a P-plane DMA block next to every window buffer
+    (``depth + P`` planes live during the shift) and the output side holds
+    the P-plane out block plus the up-to-``P-1``-plane staging ring that
+    realigns completed planes to the block grid.
     """
     if graph is None:
         from .dataflow import lower_to_dataflow
         graph = lower_to_dataflow(p, plan)
     ndim = p.ndim
     T = getattr(graph, "time_tile", 1)
+    P = getattr(graph, "plane_tile", 1)
     worst = 0
     for region in graph.regions:
         gh = region.halo
@@ -744,11 +781,11 @@ def _vmem_cost_stream(p: Program, plan: DataflowPlan, grid: tuple,
         hh = [int(gh.input_halo[a, 1]) for a in range(ndim)]
         # stage-s working extent on a non-stream axis: grid + margins +
         # (T-1-s) accumulated halo steps; stage 0 reads the full T-fold
-        # padded external planes
+        # padded external planes (plus the P-plane DMA block mid-shift)
         plane = [grid[a] + T * (hl[a] + hh[a]) for a in range(1, ndim)]
         total = 0
         for f in gh.group_inputs:
-            total += region.depths[f] * int(np.prod(plane)) * bs
+            total += (region.depths[f] + P) * int(np.prod(plane)) * bs
         for s in range(1, T):
             ext_s = [grid[a] + (T - s) * (hl[a] + hh[a])
                      for a in range(1, ndim)]
@@ -762,7 +799,9 @@ def _vmem_cost_stream(p: Program, plan: DataflowPlan, grid: tuple,
                        + acc * (hl[a] + hh[a]) for a in range(1, ndim)]
                 planes = 1 + region.rings.get(p.ops[i].out, 0)
                 total += planes * int(np.prod(ext)) * bs
-        total += len(gh.group_outputs) * int(np.prod(grid[1:])) * bs
+        out_planes = P + (P - 1 if P > 1 else 0)
+        total += (len(gh.group_outputs) * out_planes
+                  * int(np.prod(grid[1:])) * bs)
         worst = max(worst, total)
     return 2 * worst  # double-buffered pipeline, as in the block schedule
 
@@ -773,7 +812,8 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
               vmem_budget: int = hw.VMEM_PLAN_BUDGET,
               steps: int | None = None,
               schedule: str = "block",
-              time_tile: int = 1) -> DataflowPlan:
+              time_tile: int = 1,
+              plane_tile: int = 1) -> DataflowPlan:
     """Pick fuse groups and a lane-aligned block shape that fits VMEM.
 
     Mirrors the paper's auto-optimisation: the planner, not the programmer,
@@ -792,10 +832,14 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
         return _auto_plan_stream(p, grid, groups, backend=backend,
                                  interpret=interpret, dtype=dtype,
                                  vmem_budget=vmem_budget,
-                                 time_tile=time_tile)
+                                 time_tile=time_tile,
+                                 plane_tile=plane_tile)
     if time_tile > 1:
         raise ValueError("time_tile > 1 requires schedule='stream' "
                          "(temporal blocking chains the stream sweep)")
+    if plane_tile > 1:
+        raise ValueError("plane_tile > 1 requires schedule='stream' "
+                         "(spatial unrolling widens the stream sweep)")
 
     # start from a generous tile and shrink to fit the budget
     blk = []
@@ -837,12 +881,14 @@ def auto_plan(p: Program, grid: Sequence[int], *, backend: str = "pallas",
 
 def _auto_plan_stream(p: Program, grid: tuple, groups: list, *,
                       backend: str, interpret: bool, dtype: str,
-                      vmem_budget: int, time_tile: int = 1) -> DataflowPlan:
+                      vmem_budget: int, time_tile: int = 1,
+                      plane_tile: int = 1) -> DataflowPlan:
     """Stream-scheduled plan: one rolling-window sweep over the outer axis
     per (legalised) region, non-stream axes resident whole.  The ``block``
     field records the degenerate one-plane tile for display/cost purposes.
     If the full-slab window buffers blow the VMEM budget the levers are,
-    in order: a shallower temporal chain (``time_tile`` halves toward 1),
+    in order: a narrower plane unroll (``plane_tile`` halves toward 1),
+    then a shallower temporal chain (``time_tile`` halves toward 1),
     then a finer region split (intermediates stream through HBM)."""
     if backend != "pallas":
         raise ValueError(
@@ -852,22 +898,27 @@ def _auto_plan_stream(p: Program, grid: tuple, groups: list, *,
     ndim = p.ndim
     block = (1,) + grid[1:]
 
-    def build(groups, tile):
+    def build(groups, tile, ptile):
         plan = DataflowPlan(groups=groups, block=block, dtype=dtype,
                             backend=backend, interpret=interpret,
                             mesh_axes=(None,) * ndim, schedule="stream",
-                            time_tile=tile)
-        graph = lower_to_dataflow(p, plan)
+                            time_tile=tile, plane_tile=ptile)
+        graph = lower_to_dataflow(p, plan, grid)
         plan.stream = graph.spec()
         return plan, graph
 
     tile = max(1, int(time_tile))
-    plan, graph = build(groups, tile)
+    ptile = max(1, int(plane_tile))
+    plan, graph = build(groups, tile, ptile)
+    while (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
+           and ptile > 1):
+        ptile //= 2              # P-plane blocks too wide: narrower unroll
+        plan, graph = build(groups, tile, ptile)
     while (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
            and tile > 1):
         tile //= 2               # chained buffers too deep: shallower chain
-        plan, graph = build(groups, tile)
+        plan, graph = build(groups, tile, ptile)
     if (vmem_cost(p, plan, grid, graph=graph) > vmem_budget
             and any(len(g) > 1 for g in groups)):
-        plan, _ = build(stage_split(p, "per_field"), tile)
+        plan, _ = build(stage_split(p, "per_field"), tile, ptile)
     return plan

@@ -67,11 +67,13 @@ PLAN_CACHE_ENV = "REPRO_PLAN_CACHE"
 #: :data:`~repro.core.schedule.PLAN_SCHEMA_VERSION` whenever serialised
 #: plans gain fields whose absence would change behaviour (v2: the
 #: ``schedule`` axis + ``StreamSpec``; v3: temporal blocking — ``time_tile``
-#: on the plan and the effective chain depth on the stream spec).  A cache
-#: written by another version is treated as a **miss** — re-tuning is
-#: cheap, silently misreading a stale record is not — and the next store
-#: rewrites the file at the current version.
-CACHE_SCHEMA_VERSION = 3
+#: on the plan and the effective chain depth on the stream spec; v4:
+#: spatial unrolling — ``plane_tile`` on the plan and the effective sweep
+#: width on the stream spec).  A cache written by another version is
+#: treated as a **miss** — re-tuning is cheap, silently misreading a stale
+#: record is not — and the next store rewrites the file at the current
+#: version.
+CACHE_SCHEMA_VERSION = 4
 
 
 def default_cache_path() -> str:
@@ -97,6 +99,10 @@ class TuneConfig:
     # only — single-step sweeps have no update rule to chain through).
     # Depths that legalise to the same effective chain dedup to one run.
     time_tiles: tuple = (1, 2, 4)
+    # spatial-unrolling widths tried for stream candidates (single-step and
+    # fused-loop alike — a wider sweep step needs no update rule).  Widths
+    # the legaliser demotes to the same effective P dedup to one run.
+    plane_tiles: tuple = (1, 2, 4)
     dtypes: tuple | None = None   # None = the dtype compile_program asked for
     seed: int = 0               # synthetic measurement data
     # the cache key identifies the *problem*, not the search effort: a plan
@@ -299,10 +305,15 @@ def _behaviour_key(plan: DataflowPlan, carry_write: str, backend: str,
         # the same effective depth lower identically.
         eff = (plan.stream.time_tile if plan.stream is not None
                else plan.time_tile)
+        # the effective sweep width matters in both modes — spatial
+        # unrolling needs no update rule — and requested widths demoted to
+        # the same effective P lower identically.
+        eff_p = (plan.stream.plane_tile if plan.stream is not None
+                 else plan.plane_tile)
         regions = (plan.stream.regions if plan.stream is not None
                    else tuple(tuple(g) for g in plan.groups))
         return ("stream", regions, plan.dtype, cw,
-                int(eff) if with_loop else 1)
+                int(eff) if with_loop else 1, int(eff_p))
     return (tuple(tuple(g) for g in plan.groups), tuple(plan.block),
             plan.dtype, cw)
 
@@ -346,13 +357,16 @@ def _candidates(p: Program, grid, backend: str, interpret: bool,
         # effective chain dedup via the behaviour key)
         if backend == "pallas" and ndim >= 2:
             tiles = tuple(cfg.time_tiles) if with_loop else (1,)
-            for tt in tiles:
+            ptiles = tuple(cfg.plane_tiles) or (1,)
+            for tt, pt in itertools.product(tiles, ptiles):
                 plan_s = auto_plan(p, grid, backend=backend,
                                    interpret=interpret, dtype=dt,
                                    strategy=strat,
                                    vmem_budget=cfg.vmem_budget, steps=steps,
-                                   schedule="stream", time_tile=int(tt))
+                                   schedule="stream", time_tile=int(tt),
+                                   plane_tile=int(pt))
                 tag = f"/T={int(tt)}" if int(tt) > 1 else ""
+                tag += f"/P={int(pt)}" if int(pt) > 1 else ""
                 for cw in carry_writes:
                     add(plan_s, cw, f"stream/{strat}{tag}/cw={cw}"
                                    + (f"/dtype={dt}" if dt != "float32"
@@ -490,6 +504,10 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
         "time_tile": int(winner.plan.stream.time_tile
                          if winner.plan.stream is not None
                          else winner.plan.time_tile),
+        # effective sweep width of the winner (1 = plane-at-a-time)
+        "plane_tile": int(winner.plan.stream.plane_tile
+                          if winner.plan.stream is not None
+                          else winner.plan.plane_tile),
         "us_single": winner.us_single,
         "us_fused": winner.us_fused,
         "baseline_us_single": baseline.us_single,

@@ -167,12 +167,14 @@ class StencilEngine:
     _OPTION_KNOBS = (("backend", "jnp_fused"), ("interpret", True),
                      ("schedule", None), ("strategy", "auto"),
                      ("dtype", "float32"), ("mesh", None),
-                     ("mesh_axes", None), ("time_tile", None))
+                     ("mesh_axes", None), ("time_tile", None),
+                     ("plane_tile", None))
 
     def __init__(self, *, backend: str = "jnp_fused", interpret: bool = True,
                  schedule: str | None = None, strategy: str = "auto",
                  dtype: str = "float32", mesh=None,
                  mesh_axes: tuple | None = None, time_tile: int | None = None,
+                 plane_tile: int | None = None,
                  options: CompileOptions | None = None, max_batch: int = 8,
                  window_s: float = 0.002, queue_depth: int = 64,
                  max_executors: int | None = None,
@@ -180,7 +182,8 @@ class StencilEngine:
                  autostart: bool = True):
         loose = dict(backend=backend, interpret=interpret, schedule=schedule,
                      strategy=strategy, dtype=dtype, mesh=mesh,
-                     mesh_axes=mesh_axes, time_tile=time_tile)
+                     mesh_axes=mesh_axes, time_tile=time_tile,
+                     plane_tile=plane_tile)
         co_defaults = {f.name: f.default
                        for f in dataclasses.fields(CompileOptions)}
         for name, default in self._OPTION_KNOBS:
@@ -292,7 +295,8 @@ class StencilEngine:
             bucket_fingerprint(sp, spec.bucket, backend=self.backend,
                                dtype=self.dtype, interpret=self.interpret,
                                schedule=self.schedule, steps=req.steps,
-                               mesh=self.mesh, mesh_axes=self.mesh_axes),
+                               mesh=self.mesh, mesh_axes=self.mesh_axes,
+                               plane_tile=self.plane_tile),
             f"update={ukey}",
             f"jax={jax.__version__}",
         ])
@@ -403,7 +407,8 @@ class StencilEngine:
                 strategy=self.strategy, steps=req.steps, update=update,
                 carry_write=carry_write, schedule=self.schedule,
                 mesh=self.mesh, mesh_axes=self.mesh_axes,
-                time_tile=self.time_tile, plan_cache=self.plan_cache))
+                time_tile=self.time_tile, plane_tile=self.plane_tile,
+                plan_cache=self.plan_cache))
         self.stats.compiles += 1
         cw = ex.time_spec.carry_write if ex.time_spec is not None else "repad"
         if self.plan_cache is not None and not record_hit:
