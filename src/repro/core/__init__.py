@@ -8,8 +8,8 @@ from .dataflow import (StreamGraph, StreamRegion, chain_split_reason,
                        effective_plane_tile, effective_time_tile,
                        lower_to_dataflow, plane_split_reason)
 from .ir import Program
-from .pipeline import (CompiledStencil, CompileOptions, compile_program,
-                       run_time_loop)
+from .pipeline import (CompiledStencil, CompileOptions, TileDemotionWarning,
+                       compile_program, run_time_loop)
 from .schedule import (DataflowPlan, ShardSpec, StreamSpec, TimeLoopSpec,
                        adapt_update, auto_plan, make_shard_spec,
                        plan_from_dict, plan_time_loop, plan_to_dict,

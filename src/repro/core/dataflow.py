@@ -76,6 +76,8 @@ from typing import Sequence
 
 import numpy as np
 
+from ..obs.events import ChainDemoted, PlaneDemoted
+from ..obs.trace import current_tracer
 from .ir import FieldRole, Program
 from .passes import GroupHalo, _zeros
 from .schedule import StreamSpec
@@ -585,9 +587,23 @@ def lower_to_dataflow(p: Program, plan, grid: Sequence[int] | None = None,
         grid = tuple(int(g) for g in grid)
         if len(grid) != p.ndim:
             raise ValueError(f"grid rank {len(grid)} != ndim {p.ndim}")
-    eff = effective_time_tile(p, region_ops,
-                              getattr(plan, "time_tile", 1))
-    eff_p = effective_plane_tile(p, getattr(plan, "plane_tile", 1), grid)
+    req_t = max(1, int(getattr(plan, "time_tile", 1)))
+    req_p = max(1, int(getattr(plan, "plane_tile", 1)))
+    eff = effective_time_tile(p, region_ops, req_t)
+    eff_p = effective_plane_tile(p, req_p, grid)
+    # demotions are *events*, not silent field values: the ambient tracer
+    # (a no-op unless tracing is on) records why the request shrank, with
+    # the same structured reason the compile-time warning carries
+    tracer = current_tracer()
+    if tracer.enabled:
+        if eff < req_t:
+            tracer.emit(ChainDemoted(
+                program=p.name, requested=req_t, effective=eff,
+                reason=chain_split_reason(p, region_ops) or ""))
+        if eff_p < req_p:
+            tracer.emit(PlaneDemoted(
+                program=p.name, requested=req_p, effective=eff_p,
+                reason=plane_split_reason(p, req_p, grid) or ""))
     return StreamGraph(program=p.name, axis=STREAM_AXIS, regions=regions,
                        time_tile=eff, plane_tile=eff_p,
                        stream_sharded=stream_sharded)

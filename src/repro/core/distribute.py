@@ -58,6 +58,7 @@ except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from ..kernels.stencil3d import build_group_call
+from ..obs.trace import current_tracer
 from . import boundary as bc
 from .dataflow import STREAM_AXIS, lower_to_dataflow
 from .ir import Program
@@ -346,6 +347,11 @@ def lower_sharded(p: Program, plan: DataflowPlan, global_grid,
     jdtype = _DTYPES[plan.dtype]
     bnd = p.boundaries()
     backend = plan.backend
+    tracer = current_tracer()
+    if tracer.enabled:
+        tracer.event("ShardLowered", program=p.name, mode="single",
+                     backend=backend, mesh=dict(mesh.shape),
+                     local_grid="x".join(str(g) for g in shard.local_grid))
     mesh_axes, axis_sizes = shard.mesh_axes, shard.axis_sizes
     out_names = p.output_fields()
     origin_arrs, origin_specs = _origin_inputs(shard)
@@ -448,6 +454,12 @@ def lower_sharded_time_loop(p: Program, plan: DataflowPlan, global_grid,
         raise ValueError("spec has no ShardSpec; use the local lowerings")
     update = adapt_update(update)
     global_grid = tuple(int(g) for g in global_grid)
+    tracer = current_tracer()
+    if tracer.enabled:
+        tracer.event("ShardLowered", program=p.name, mode="loop",
+                     backend=plan.backend, mesh=dict(mesh.shape),
+                     local_grid="x".join(str(g) for g in shard.local_grid),
+                     steps=int(spec.steps))
     ndim = p.ndim
     jdtype = _DTYPES[plan.dtype]
     bnd = p.boundaries()

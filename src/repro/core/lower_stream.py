@@ -42,6 +42,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..obs.trace import current_tracer
 from .dataflow import StreamGraph, StreamRegion, lower_to_dataflow
 from .expr_eval import evaluate
 from .ir import Access, Program
@@ -562,7 +563,14 @@ def lower(p: Program, plan: DataflowPlan, grid_shape,
     between stages), so any ``time_tile`` on the plan is ignored here;
     the graph's effective ``plane_tile`` applies — spatial unrolling needs
     no update rule."""
+    if graph is None:
+        graph = lower_to_dataflow(p, plan, grid_shape)
     dtype, calls = _build_calls(p, plan, grid_shape, graph)
+    tracer = current_tracer()
+    if tracer.enabled:
+        tracer.event("StreamLowered", program=p.name, mode="single",
+                     regions=len(calls), time_tile=1,
+                     plane_tile=int(graph.plane_tile))
     return lower_from_calls(p, dtype, calls)
 
 
@@ -586,6 +594,10 @@ def lower_time_loop(p: Program, plan: DataflowPlan, grid_shape,
         graph = lower_to_dataflow(p, plan, grid_shape)
     T = int(getattr(graph, "time_tile", 1))
     P = int(getattr(graph, "plane_tile", 1))
+    tracer = current_tracer()
+    if tracer.enabled:
+        tracer.event("StreamLowered", program=p.name, mode="loop",
+                     regions=len(graph.regions), time_tile=T, plane_tile=P)
     if T <= 1:
         _, calls = _build_calls(p, plan, grid_shape, graph)
         return time_loop_from_calls(p, dtype, grid_shape, spec, update,

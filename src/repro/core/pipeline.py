@@ -21,10 +21,14 @@ Backends:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Mapping
 
 import jax
 
+from ..obs.events import PlanChosen
+from ..obs.metrics import global_metrics
+from ..obs.trace import resolve_tracer
 from . import dataflow, distribute, lower_jnp, lower_pallas, lower_stream
 from .ir import Program
 from .passes import infer_halo
@@ -33,6 +37,13 @@ from .schedule import (DataflowPlan, ShardSpec, TimeLoopSpec, auto_plan,
                        shard_local_grid)
 
 _BACKENDS = ("pallas", "jnp_fused", "jnp_naive")
+
+
+class TileDemotionWarning(UserWarning):
+    """An explicitly requested ``time_tile``/``plane_tile`` was demoted by
+    stream legalisation — the compile still succeeds, at the effective
+    depth/width recorded on ``plan.stream`` (the structured reason is in
+    the message and in the ``ChainDemoted``/``PlaneDemoted`` trace event)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +74,13 @@ class CompileOptions:
     single-step sweeps unroll too).  ``None`` defers to the plan; an
     integer forces the requested width, which geometry may still demote
     to 1 (see ``StreamSpec.plane_tile``).
+
+    ``trace`` enables structured tracing for this compile: a
+    :class:`repro.obs.Tracer` (or ``True`` to install a fresh process
+    tracer).  ``None`` defers to the ambient tracer — the process-wide
+    no-op unless one was installed via ``repro.obs.set_tracer`` or
+    ``REPRO_TRACE=path`` — so tracing is off by default with branch-only
+    overhead.
     """
 
     backend: str = "pallas"
@@ -82,6 +100,7 @@ class CompileOptions:
     schedule: str | None = None
     time_tile: int | None = None
     plane_tile: int | None = None
+    trace: object = None
 
 
 _OPTION_DEFAULTS = {f.name: f.default
@@ -229,12 +248,28 @@ def compile_program(p: Program, grid, *,
     ``plan.stream.plane_tile``) when P exceeds the shard-local extent.
     """
     o = _resolve_options(options, kwargs)
+    tracer = resolve_tracer(o.trace)
+    with tracer.active(), tracer.span(
+            "compile", program=p.name,
+            grid="x".join(str(int(g)) for g in grid),
+            backend=o.backend, strategy=o.strategy) as sp:
+        return _compile(p, grid, o, tracer, sp)
+
+
+def _compile(p: Program, grid, o: CompileOptions, tracer,
+             sp) -> CompiledStencil:
+    """The compile body, running inside ``compile_program``'s span (with
+    ``tracer`` installed as the ambient one, so the layers below — plan
+    legalisation, tuning, sharded/stream lowering — emit into it without
+    threading a tracer argument everywhere)."""
     backend, plan, jit, interpret = o.backend, o.plan, o.jit, o.interpret
     dtype, strategy, steps, update = o.dtype, o.strategy, o.steps, o.update
     carry_write, tune_config = o.carry_write, o.tune_config
     plan_cache, mesh, mesh_axes = o.plan_cache, o.mesh, o.mesh_axes
     boundary, schedule, time_tile = o.boundary, o.schedule, o.time_tile
     plane_tile = o.plane_tile
+    metrics = global_metrics()
+    metrics.counter("compile.compiles").inc()
 
     grid = tuple(int(g) for g in grid)
     if len(grid) != p.ndim:
@@ -272,6 +307,7 @@ def compile_program(p: Program, grid, *,
         plan_grid = grid
 
     tuned_cw = None
+    tuned_rec = None
     if plan is None:
         if strategy == "tuned":
             from . import tune
@@ -281,6 +317,7 @@ def compile_program(p: Program, grid, *,
                                       cache=plan_cache,
                                       mesh=mesh, mesh_axes=mesh_axes)
             plan, tuned_cw = res.plan, res.carry_write
+            tuned_rec = res.record
         else:
             plan = auto_plan(p, plan_grid, backend=backend,
                              interpret=interpret, dtype=dtype,
@@ -322,11 +359,16 @@ def compile_program(p: Program, grid, *,
     stream_axis = None
     if plan.schedule == "stream":
         _check_schedule(backend, plan.schedule)
+        metrics.counter("compile.stream_lowerings").inc()
+        update_demote = None
         if plan.time_tile > 1 and not getattr(update, "_plane_local", True):
             # chained stages run the update inside the kernel on resident
             # planes; an update that reads the whole grid (e.g. the serving
             # layer's bucket refresh) has no plane-local form, so the chain
             # demotes to 1 — the step-level analog of chain_split_reason
+            update_demote = ("update rule is not plane-local (it reads "
+                             "beyond the resident planes), so chained "
+                             "stages cannot apply it in-kernel")
             plan = dataclasses.replace(plan, time_tile=1)
         stream_axis = dataflow.STREAM_AXIS
         # a mesh that decomposes the sweep axis needs exact, chain-deepened
@@ -341,6 +383,26 @@ def compile_program(p: Program, grid, *,
         graph = dataflow.lower_to_dataflow(p, plan, plan_grid,
                                            stream_sharded=stream_sharded)
         plan = dataclasses.replace(plan, stream=graph.spec())
+        # an *explicitly requested* tile depth/width that legalisation
+        # demoted warns (once per compile): non-tracing users must not
+        # silently lose what they asked for.  Plan-carried requests (tuner
+        # candidates, cached plans) stay quiet here — the dataflow layer
+        # emits the ChainDemoted/PlaneDemoted trace events for those.
+        if (time_tile is not None and time_tile > 1
+                and graph.time_tile < time_tile):
+            reason = update_demote or dataflow.chain_split_reason(
+                p, [list(r.ops) for r in graph.regions])
+            warnings.warn(
+                f"time_tile={time_tile} demoted to effective "
+                f"{graph.time_tile} for {p.name!r}: {reason}",
+                TileDemotionWarning, stacklevel=4)
+        if (plane_tile is not None and plane_tile > 1
+                and graph.plane_tile < plane_tile):
+            reason = dataflow.plane_split_reason(p, plane_tile, plan_grid)
+            warnings.warn(
+                f"plane_tile={plane_tile} demoted to effective "
+                f"{graph.plane_tile} for {p.name!r}: {reason}",
+                TileDemotionWarning, stacklevel=4)
         # chain-accumulated when the graph temporal-blocks: the fused-loop
         # carry must cover what the chained kernels slice per sweep
         group_halos = graph.group_halos()
@@ -388,6 +450,28 @@ def compile_program(p: Program, grid, *,
         raw = lower_jnp.lower(p, mode=backend.removeprefix("jnp_"))
 
     fn = jax.jit(raw) if jit else raw
+    if steps is not None:
+        metrics.counter("compile.fused_loops").inc()
+    if tracer.enabled:
+        eff_tt = (plan.stream.time_tile if plan.stream is not None
+                  else plan.time_tile)
+        eff_pt = (plan.stream.plane_tile if plan.stream is not None
+                  else plan.plane_tile)
+        sp.set(schedule=plan.schedule, time_tile=int(eff_tt),
+               plane_tile=int(eff_pt), steps=steps,
+               mesh=None if mesh is None else dict(mesh.shape))
+        if o.plan is None:
+            # this compile *chose* a plan (heuristic or tuned); compiles
+            # handed an explicit plan= (tuner candidates, cached serving
+            # plans) did not decide anything worth announcing
+            rec = tuned_rec or {}
+            tracer.emit(PlanChosen(
+                program=p.name, backend=backend, schedule=plan.schedule,
+                strategy=strategy, label=rec.get("label", "auto_plan"),
+                time_tile=int(eff_tt), plane_tile=int(eff_pt),
+                modeled_us=rec.get("modeled_us"),
+                measured_us=rec.get("us_fused") or rec.get("us_single"),
+                roofline_fraction=rec.get("roofline_fraction")))
     return CompiledStencil(program=p, plan=plan, grid=grid, _fn=fn,
                            jitted=jit, time_spec=time_spec, shard=shard)
 

@@ -49,6 +49,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import hw
+from ..obs.events import CacheHit, CacheMiss, PlanChosen
+from ..obs.metrics import MetricsRegistry, global_metrics
+from ..obs.trace import current_tracer
 from .ir import Program
 from .schedule import (PLAN_SCHEMA_VERSION, DataflowPlan, auto_plan,
                        mesh_fingerprint, plan_from_dict, plan_to_dict,
@@ -127,12 +130,26 @@ class PlanCache:
     :func:`tune_plan`).  Files written by a different schema version (or
     unreadable ones) load as empty: every lookup misses, and the first
     store rewrites the file at the current version.
+
+    Every ``lookup`` counts itself into the cache's own metrics registry
+    (``cache.metrics``, counters ``hits``/``misses``) and mirrors into the
+    process-wide registry as ``plan_cache.hits``/``plan_cache.misses`` —
+    the *cache* owns its hit accounting, callers just read the counters.
     """
 
     def __init__(self, path: str | None = "auto"):
         self.path = default_cache_path() if path == "auto" else path
         self._mem: dict = {}
         self._lock = threading.Lock()
+        self.metrics = MetricsRegistry()
+
+    @property
+    def hits(self) -> int:
+        return self.metrics.counter("hits").value
+
+    @property
+    def misses(self) -> int:
+        return self.metrics.counter("misses").value
 
     def _load(self) -> dict:
         if self.path and os.path.exists(self.path):
@@ -148,9 +165,13 @@ class PlanCache:
 
     def lookup(self, key: str) -> dict | None:
         with self._lock:
-            if key in self._mem:
-                return self._mem[key]
-        return self._load()["entries"].get(key)
+            rec = self._mem.get(key)
+        if rec is None:
+            rec = self._load()["entries"].get(key)
+        name = "hits" if rec is not None else "misses"
+        self.metrics.counter(name).inc()
+        global_metrics().counter(f"plan_cache.{name}").inc()
+        return rec
 
     def store(self, key: str, record: dict) -> None:
         """Persist ``record`` under ``key`` — safe under concurrent writers.
@@ -406,6 +427,20 @@ def _default_timer_factory(warmup: int, repeats: int) -> Callable:
     return timer
 
 
+def _roofline_fraction(cand: _Candidate, steps: int | None) -> float | None:
+    """Achieved fraction of the plan model's prediction:
+    ``modeled_time / measured_time`` for the mode the candidate is ranked
+    by (fused ``steps=N`` when measured, else single-step).  ``None`` when
+    the candidate was never measured or the model degenerated."""
+    meas_us = cand.us_fused if cand.us_fused is not None else cand.us_single
+    if meas_us is None or meas_us <= 0:
+        return None
+    if not (cand.modeled_s > 0) or cand.modeled_s == float("inf"):
+        return None
+    mult = (steps or 1) if cand.us_fused is not None else 1
+    return (cand.modeled_s * 1e6 * mult) / meas_us
+
+
 def _measure(p, grid, cand: _Candidate, data, update, cfg: TuneConfig,
              timer, mesh=None, mesh_axes=None) -> None:
     # deferred: pipeline imports tune
@@ -457,8 +492,17 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
             mesh_axes = tuple(mesh.axis_names)
         mesh_axes = normalize_mesh_axes(mesh_axes, p.ndim)
         plan_grid = shard_local_grid(grid, mesh, mesh_axes)
-    timer = cfg.timer or _default_timer_factory(cfg.warmup, cfg.repeats)
+    timer0 = cfg.timer or _default_timer_factory(cfg.warmup, cfg.repeats)
+
+    def timer(fn):
+        # every on-device timing is counted process-wide: cache-hit tests
+        # assert a zero delta here instead of monkeypatching the timer
+        global_metrics().counter("tune.timed_runs").inc()
+        return timer0(fn)
+
     with_loop = update is not None
+    tracer = current_tracer()
+    global_metrics().counter("tune.runs").inc()
 
     # stream candidates compete under a mesh too: each shard sweeps its
     # local block (with exact neighbour ghost planes when the stream axis
@@ -485,9 +529,18 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
     survivors = [baseline] + feasible[:max(0, cfg.max_measured - 1)]
 
     data = _synth_data(p, grid, seed=cfg.seed)
-    for c in survivors:
-        _measure(p, grid, c, data, update, cfg, timer,
-                 mesh=mesh, mesh_axes=mesh_axes)
+    with tracer.span("tune", program=p.name, backend=backend,
+                     mode="loop" if with_loop else "single",
+                     candidates=len(cands), measured=len(survivors)):
+        for c in survivors:
+            with tracer.span("tune.candidate", program=p.name,
+                             label=c.label) as csp:
+                _measure(p, grid, c, data, update, cfg, timer,
+                         mesh=mesh, mesh_axes=mesh_axes)
+                csp.set(modeled_us=c.modeled_s * 1e6,
+                        us_single=c.us_single, us_fused=c.us_fused,
+                        roofline_fraction=_roofline_fraction(
+                            c, cfg.steps if with_loop else None))
 
     order = sorted(range(len(survivors)),
                    key=lambda i: (survivors[i].score(), i))
@@ -513,6 +566,11 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
         "baseline_us_single": baseline.us_single,
         "baseline_us_fused": baseline.us_fused,
         "modeled_us": winner.modeled_s * 1e6,
+        # achieved fraction of the roofline plan model's prediction for the
+        # winner (modeled/measured; tiny under CPU interpret — the tracked
+        # quantity is its trend, see repro.obs.achieved)
+        "roofline_fraction": _roofline_fraction(
+            winner, cfg.steps if with_loop else None),
         "mesh": _mesh_tag(mesh, mesh_axes),
         "steps": cfg.steps if with_loop else None,
         "candidates": len(cands),
@@ -522,6 +580,14 @@ def tune_plan(p: Program, grid, *, backend: str = "pallas",
         "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
     }
     cache.store(key, record)
+    if tracer.enabled:
+        tracer.emit(PlanChosen(
+            program=p.name, backend=backend,
+            schedule=winner.plan.schedule, strategy="tuned",
+            label=winner.label, time_tile=record["time_tile"],
+            plane_tile=record["plane_tile"], modeled_us=record["modeled_us"],
+            measured_us=winner.score(),
+            roofline_fraction=record["roofline_fraction"]))
     return TuneResult(plan=winner.plan, carry_write=winner.carry_write,
                       key=key, record=record, cache_hit=False,
                       measured=[survivors[i] for i in order])
@@ -550,10 +616,15 @@ def get_tuned_plan(p: Program, grid, *, backend: str = "pallas",
                     mesh=mesh, mesh_axes=mesh_axes)
     rec = None if (config is not None and config.force_retune) \
         else cache.lookup(key)
+    tracer = current_tracer()
     if rec is not None:
+        if tracer.enabled:
+            tracer.emit(CacheHit(cache="tuned_plan", key=key))
         return TuneResult(plan=plan_from_dict(rec["plan"]),
                           carry_write=rec.get("carry_write", "repad"),
                           key=key, record=rec, cache_hit=True)
+    if tracer.enabled:
+        tracer.emit(CacheMiss(cache="tuned_plan", key=key))
     return tune_plan(p, grid, backend=backend, interpret=interpret,
                      dtype=dtype, update=update, config=config, cache=cache,
                      mesh=mesh, mesh_axes=mesh_axes)

@@ -1,0 +1,129 @@
+"""Roofline-achieved instrumentation: measured performance over the model.
+
+The roofline model (:func:`repro.analysis.stencil_roofline.model_plan`)
+predicts seconds per time step for a plan's exact geometry; nothing in the
+stack ever compared that prediction against reality (ROADMAP item 3).
+This module is the bridge: wrap any compiled executor, measure it with the
+same warm-up + best-of-k discipline as the tuner, and report
+
+    achieved_fraction = modeled_seconds / measured_seconds
+
+i.e. achieved performance as a fraction of the model's prediction (> 1
+means the run beat the model — expected in interpret mode on CPU where
+the model prices TPU hardware, the *trend* per commit is the observable).
+The fraction rides on tune records (``record["roofline_fraction"]``),
+:class:`~repro.obs.events.PlanChosen` events, and the smoke-benchmark
+rows that ROADMAP item 3's regression gate reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AchievedResult:
+    """One measured-vs-modeled comparison for a compiled executor."""
+
+    measured_s: float         # best-of-k wall seconds for one call
+    modeled_s: float          # model_plan prediction for the same call
+    steps: int                # time steps one call advances (1 = single)
+    points: float             # grid points per step
+    bytes_moved: float        # modeled HBM bytes for the whole call
+    achieved_fraction: float  # modeled_s / measured_s, in (0, inf)
+
+    @property
+    def steps_per_sec(self) -> float:
+        return self.steps / self.measured_s if self.measured_s > 0 else 0.0
+
+    @property
+    def gbytes_per_sec(self) -> float:
+        return (self.bytes_moved / self.measured_s / 1e9
+                if self.measured_s > 0 else 0.0)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["steps_per_sec"] = self.steps_per_sec
+        return d
+
+
+def achieved_fraction(modeled_s: float, measured_s: float) -> float:
+    """``modeled / measured`` with degenerate timings clamped out of the
+    (0, inf) acceptance interval's edges rather than raising mid-benchmark."""
+    if measured_s <= 0 or modeled_s <= 0:
+        return 0.0
+    return modeled_s / measured_s
+
+
+def model_call_seconds(ex) -> float:
+    """The roofline prediction for ONE call of a compiled executor: the
+    per-step :func:`~repro.analysis.stencil_roofline.model_plan` price of
+    its plan (on the shard-local grid when sharded — shards run in
+    parallel) times the steps a call advances."""
+    from ..analysis.stencil_roofline import model_plan
+    grid = ex.grid
+    if getattr(ex, "shard", None) is not None:
+        grid = ex.shard.local_grid
+    steps = ex.time_spec.steps if getattr(ex, "time_spec", None) else 1
+    return model_plan(ex.program, ex.plan, grid) * steps
+
+
+def fraction_for(ex, measured_s: float) -> float:
+    """``achieved_fraction`` for an executor somebody else already timed
+    (the benchmark rows' path — no second measurement)."""
+    return achieved_fraction(model_call_seconds(ex), measured_s)
+
+
+def measure_achieved(ex, fields, scalars=None, coeffs=None, *,
+                     warmup: int = 1, repeats: int = 3,
+                     timer=None, tracer=None) -> AchievedResult:
+    """Measure ``ex`` (warm-up + best-of-k ``block_until_ready``) and
+    compare against its roofline prediction.
+
+    ``timer(fn) -> seconds`` is injectable exactly like
+    :class:`~repro.core.tune.TuneConfig.timer`; ``tracer`` (default: the
+    ambient one) gets a ``roofline.achieved`` span carrying the result."""
+    import jax
+
+    from .trace import current_tracer
+    tracer = tracer or current_tracer()
+    fields = dict(fields)
+    scalars = dict(scalars or {})
+    coeffs = dict(coeffs or {})
+
+    def call():
+        return ex(fields, scalars, coeffs)
+
+    if timer is None:
+        def timer(fn):
+            out = None
+            for _ in range(max(1, warmup)):
+                out = fn()
+            jax.block_until_ready(out)
+            best = float("inf")
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                out = fn()
+                jax.block_until_ready(out)
+                best = min(best, time.perf_counter() - t0)
+            return best
+
+    with tracer.span("roofline.achieved", program=ex.program.name,
+                     backend=ex.plan.backend,
+                     schedule=getattr(ex.plan, "schedule", "block")) as sp:
+        measured = float(timer(call))
+        steps = ex.time_spec.steps if getattr(ex, "time_spec", None) else 1
+        modeled = model_call_seconds(ex)
+        points = float(np.prod([int(g) for g in ex.grid]))
+        from ..analysis.stencil_roofline import plan_bytes_per_point
+        bpp = plan_bytes_per_point(ex.program, ex.plan, ex.grid)
+        res = AchievedResult(
+            measured_s=measured, modeled_s=modeled, steps=int(steps),
+            points=points, bytes_moved=bpp * points * int(steps),
+            achieved_fraction=achieved_fraction(modeled, measured))
+        sp.set(measured_s=measured, modeled_s=modeled,
+               steps=int(steps), roofline_fraction=res.achieved_fraction)
+    return res

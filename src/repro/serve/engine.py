@@ -43,6 +43,8 @@ from ..core.ir import Program
 from ..core.pipeline import CompileOptions, compile_program
 from ..core.schedule import BucketSpec, bucket_fingerprint, bucket_for
 from ..core.tune import PlanCache, make_serve_record, read_serve_record
+from ..obs.events import CacheHit, CacheMiss, ExecutorEvicted
+from ..obs.trace import current_tracer, resolve_tracer
 from .bucket import embed_request, serving_program, wrap_update
 from .stats import ServeStats
 
@@ -179,7 +181,7 @@ class StencilEngine:
                  window_s: float = 0.002, queue_depth: int = 64,
                  max_executors: int | None = None,
                  plan_cache: PlanCache | None = None, lane: int = hw.LANE,
-                 autostart: bool = True):
+                 autostart: bool = True, tracer=None):
         loose = dict(backend=backend, interpret=interpret, schedule=schedule,
                      strategy=strategy, dtype=dtype, mesh=mesh,
                      mesh_axes=mesh_axes, time_tile=time_tile,
@@ -209,6 +211,12 @@ class StencilEngine:
                              "unbounded)")
         self.plan_cache = plan_cache
         self.lane = int(lane)
+        # the engine's tracer is captured at construction (worker threads
+        # can't see the submitting thread's ambient tracer): ``tracer=``
+        # pins one, ``tracer=True`` installs a fresh recording tracer,
+        # None inherits whatever is ambient *now* (usually the no-op)
+        self.tracer = (current_tracer() if tracer is None
+                       else resolve_tracer(tracer))
         self.stats = ServeStats()
         self._q: queue.Queue = queue.Queue(maxsize=int(queue_depth))
         # LRU over compiled buckets: hits refresh recency, inserts evict
@@ -327,6 +335,13 @@ class StencilEngine:
     # worker: micro-batching loop
     # ------------------------------------------------------------------
     def _worker(self) -> None:
+        # install the engine's tracer as this thread's ambient tracer so
+        # every compile_program / tuner / dataflow emission from the worker
+        # lands in the same trace as the serve spans
+        with self.tracer.active():
+            self._worker_loop()
+
+    def _worker_loop(self) -> None:
         while not self._stop.is_set():
             try:
                 first = self._q.get(timeout=0.05)
@@ -362,19 +377,27 @@ class StencilEngine:
                 live.append(it)
         if not live:
             return
+        tracer = self.tracer
         try:
             if key in self._executors:
                 self.stats.exec_hits += len(live)
+                if tracer.enabled:
+                    tracer.emit(CacheHit(cache="executor", key=key))
                 self._executors.move_to_end(key)      # refresh LRU recency
                 ex = self._executors[key]
             else:
                 self.stats.exec_misses += len(live)
+                if tracer.enabled:
+                    tracer.emit(CacheMiss(cache="executor", key=key))
                 ex = self._build_executor(key, live[0])
                 self._executors[key] = ex
                 while (self.max_executors is not None
                        and len(self._executors) > self.max_executors):
-                    self._executors.popitem(last=False)
+                    cold, _ = self._executors.popitem(last=False)
                     self.stats.evictions += 1
+                    if tracer.enabled:
+                        tracer.emit(ExecutorEvicted(
+                            key=cold, resident=len(self._executors)))
         except Exception as e:  # compile/planning failure fails the group
             for it in live:
                 self.stats.failed += 1
@@ -388,28 +411,37 @@ class StencilEngine:
     # ------------------------------------------------------------------
     def _build_executor(self, key: str, item: _Item) -> _BucketExecutor:
         sp, spec, req = item.program, item.spec, item.req
-        plan = carry_write = None
-        record_hit = False
-        if self.plan_cache is not None:
-            dec = read_serve_record(self.plan_cache.lookup(key))
-            if dec is not None:
-                plan, carry_write = dec
-                record_hit = True
-                self.stats.plan_hits += 1
-            else:
-                self.stats.plan_misses += 1
-        update = (None if req.update is None
-                  else wrap_update(sp, spec, req.update))
-        ex = compile_program(
-            sp, spec.bucket, options=CompileOptions(
-                backend=self.backend, plan=plan, jit=False,
-                interpret=self.interpret, dtype=self.dtype,
-                strategy=self.strategy, steps=req.steps, update=update,
-                carry_write=carry_write, schedule=self.schedule,
-                mesh=self.mesh, mesh_axes=self.mesh_axes,
-                time_tile=self.time_tile, plane_tile=self.plane_tile,
-                plan_cache=self.plan_cache))
-        self.stats.compiles += 1
+        tracer = self.tracer
+        with tracer.span("serve.build_executor", program=sp.name,
+                         bucket="x".join(str(b) for b in item.spec.bucket),
+                         steps=req.steps) as bsp:
+            plan = carry_write = None
+            record_hit = False
+            if self.plan_cache is not None:
+                dec = read_serve_record(self.plan_cache.lookup(key))
+                if dec is not None:
+                    plan, carry_write = dec
+                    record_hit = True
+                    self.stats.plan_hits += 1
+                    if tracer.enabled:
+                        tracer.emit(CacheHit(cache="serve_record", key=key))
+                else:
+                    self.stats.plan_misses += 1
+                    if tracer.enabled:
+                        tracer.emit(CacheMiss(cache="serve_record", key=key))
+            update = (None if req.update is None
+                      else wrap_update(sp, spec, req.update))
+            ex = compile_program(
+                sp, spec.bucket, options=CompileOptions(
+                    backend=self.backend, plan=plan, jit=False,
+                    interpret=self.interpret, dtype=self.dtype,
+                    strategy=self.strategy, steps=req.steps, update=update,
+                    carry_write=carry_write, schedule=self.schedule,
+                    mesh=self.mesh, mesh_axes=self.mesh_axes,
+                    time_tile=self.time_tile, plane_tile=self.plane_tile,
+                    plan_cache=self.plan_cache))
+            self.stats.compiles += 1
+            bsp.set(record_hit=record_hit, schedule=ex.plan.schedule)
         cw = ex.time_spec.carry_write if ex.time_spec is not None else "repad"
         if self.plan_cache is not None and not record_hit:
             self.plan_cache.store(
@@ -430,6 +462,11 @@ class StencilEngine:
     # batch execution
     # ------------------------------------------------------------------
     def _run_batch(self, ex: _BucketExecutor, items: list) -> None:
+        with self.tracer.span("serve.batch", program=ex.program.name,
+                              n=len(items)) as sp:
+            self._run_batch_traced(ex, items, sp)
+
+    def _run_batch_traced(self, ex: _BucketExecutor, items: list, sp) -> None:
         t0 = time.monotonic()
         try:
             embedded = [embed_request(ex.program, it.spec, it.req.fields,
@@ -465,6 +502,7 @@ class StencilEngine:
             self.stats.batches += 1
             self.stats.batched_requests += n
             self.stats.padded_slots += pad - n
+            sp.set(padded=pad - n, vmap_failed=ex.vmap_failed)
             done = time.monotonic()
             self.stats.wall_s += done - t0
             for i, it in enumerate(items):

@@ -1,51 +1,85 @@
-"""Serving metrics — counters the engine maintains and tests assert on.
+"""Serving metrics — the serve-scoped view over a metrics registry.
+
+``ServeStats`` keeps the attribute API the engine and tests have always
+used (``stats.completed += 1``, ``stats.p99_ms()``, ``snapshot()``), but
+every counter/gauge/latency sample now lives in a
+:class:`repro.obs.metrics.MetricsRegistry` (``stats.registry``), so the
+serving numbers export through the same snapshot machinery as the
+compile-side metrics and the tracer.
 
 All mutation happens either on the worker thread or under the engine's
-submit lock, so plain ints suffice; ``snapshot()`` returns a plain dict
-for logging/benchmark rows.
+submit lock, so plain registry instruments suffice; ``snapshot()`` returns
+a plain JSON-serialisable dict for logging/benchmark rows.
 """
 
 from __future__ import annotations
 
-import collections
-import dataclasses
+from ..obs.metrics import MetricsRegistry
 
-
-@dataclasses.dataclass
-class ServeStats:
-    submitted: int = 0
-    completed: int = 0
-    failed: int = 0
-    timeouts: int = 0
-
-    # executor-table hits vs builds (a build may still reuse a persisted plan)
-    exec_hits: int = 0
-    exec_misses: int = 0
+#: integer counters, in the order ``snapshot()`` reports them
+_COUNTERS = (
+    "submitted", "completed", "failed", "timeouts",
+    # executor-table hits vs builds (a build may still reuse a stored plan)
+    "exec_hits", "exec_misses",
     # PlanCache serve-record hits vs misses on executor build
-    plan_hits: int = 0
-    plan_misses: int = 0
+    "plan_hits", "plan_misses",
     # LRU evictions from the executor table (``max_executors`` cap)
-    evictions: int = 0
+    "evictions",
+    "traces",            # update-rule traces observed (0 when warm)
+    "compiles",          # executor builds that ran compile_program
+    "batches", "batched_requests",
+    "padded_slots",      # replicated filler slots across all batches
+)
 
-    traces: int = 0          # update-rule traces observed (0 when warm)
-    compiles: int = 0        # executor builds that ran compile_program
+_GAUGES = ("wall_s",)    # time spent inside batch execution
 
-    batches: int = 0
-    batched_requests: int = 0
-    padded_slots: int = 0    # replicated filler slots across all batches
+#: capped latency reservoir (steady-state quantiles, not all-time)
+LATENCY_WINDOW = 4096
 
-    wall_s: float = 0.0      # time spent inside batch execution
 
-    def __post_init__(self):
-        self._lat_ms = collections.deque(maxlen=4096)
+class ServeStats:
+    """Engine counters as registry-backed attributes.
 
+    ``ServeStats(registry=...)`` scopes the instruments into a shared
+    registry (e.g. to merge several engines into one snapshot); the
+    default is a private registry per stats object."""
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        object.__setattr__(self, "registry", reg)
+        for n in _COUNTERS:
+            reg.counter(n)
+        for n in _GAUGES:
+            reg.gauge(n)
+        reg.histogram("latency_ms", maxlen=LATENCY_WINDOW)
+
+    # attribute API: reads return plain numbers, writes set the instrument
+    # (so ``stats.completed += 1`` mutates the registry counter)
+    def __getattr__(self, name: str):
+        reg = self.__dict__["registry"]
+        if name in _COUNTERS:
+            return reg.counter(name).value
+        if name in _GAUGES:
+            return reg.gauge(name).value
+        raise AttributeError(f"ServeStats has no metric {name!r}")
+
+    def __setattr__(self, name: str, value) -> None:
+        reg = self.__dict__["registry"]
+        if name in _COUNTERS:
+            reg.counter(name).set(value)
+        elif name in _GAUGES:
+            reg.gauge(name).set(value)
+        else:
+            object.__setattr__(self, name, value)
+
+    # ------------------------------------------------------------------
     def record_latency(self, ms: float) -> None:
-        self._lat_ms.append(float(ms))
+        self.registry.histogram("latency_ms").observe(float(ms))
 
     def reset_latencies(self) -> None:
         """Drop recorded latencies (e.g. after a warm-up phase, so the
         quantiles describe steady-state traffic, not compiles)."""
-        self._lat_ms.clear()
+        self.registry.histogram("latency_ms").clear()
 
     # ------------------------------------------------------------------
     def cache_hit_rate(self) -> float:
@@ -62,11 +96,7 @@ class ServeStats:
         return self.completed / self.wall_s if self.wall_s > 0 else 0.0
 
     def latency_quantile(self, q: float) -> float:
-        if not self._lat_ms:
-            return 0.0
-        xs = sorted(self._lat_ms)
-        i = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
-        return xs[i]
+        return self.registry.histogram("latency_ms").quantile(q)
 
     def p50_ms(self) -> float:
         return self.latency_quantile(0.50)
@@ -75,9 +105,9 @@ class ServeStats:
         return self.latency_quantile(0.99)
 
     def snapshot(self) -> dict:
-        d = {f.name: getattr(self, f.name)
-             for f in dataclasses.fields(self)}
+        d = {n: getattr(self, n) for n in _COUNTERS + _GAUGES}
         d.update(hit_rate=self.cache_hit_rate(), occupancy=self.occupancy(),
                  throughput=self.throughput(), p50_ms=self.p50_ms(),
-                 p99_ms=self.p99_ms(), latencies=len(self._lat_ms))
+                 p99_ms=self.p99_ms(),
+                 latencies=len(self.registry.histogram("latency_ms")))
         return d

@@ -76,26 +76,40 @@ def test_tuner_determinism_with_fake_timer(backend):
 def test_second_tuned_compile_is_pure_cache_hit(tmp_path):
     """Acceptance: the second ``strategy="tuned"`` compile performs zero
     timed runs and reuses the stored plan — across PlanCache instances
-    (i.e. through the JSON file, not just process memory)."""
+    (i.e. through the JSON file, not just process memory).  The proof is
+    the observability counters: the cache counts its own hit, and the
+    process-wide ``tune.timed_runs`` counter (incremented on *every* timer
+    invocation, fake or real) does not move."""
+    from repro.obs import global_metrics
+
     p = pw_advection()
     path = str(tmp_path / "plans.json")
     update = pw_advection_update(0.1)
+    timed = global_metrics().counter("tune.timed_runs")
 
     timer1, calls1 = make_fake_timer()
+    cache1 = PlanCache(path=path)
+    t0 = timed.value
     ex1 = compile_program(p, GRID, backend="jnp_fused", strategy="tuned",
                           steps=2, update=update,
                           tune_config=TuneConfig(steps=2, max_measured=3,
                                                  timer=timer1),
-                          plan_cache=PlanCache(path=path))
+                          plan_cache=cache1)
     assert calls1["n"] > 0          # the first compile really tuned
+    assert timed.value == t0 + calls1["n"]   # every timing was counted
+    assert cache1.misses >= 1 and cache1.hits == 0
 
     timer2, calls2 = make_fake_timer()
+    cache2 = PlanCache(path=path)
+    t1 = timed.value
     ex2 = compile_program(p, GRID, backend="jnp_fused", strategy="tuned",
                           steps=2, update=update,
                           tune_config=TuneConfig(steps=2, max_measured=3,
                                                  timer=timer2),
-                          plan_cache=PlanCache(path=path))
-    assert calls2["n"] == 0         # pure cache hit: zero timed runs
+                          plan_cache=cache2)
+    assert timed.value == t1        # pure cache hit: zero timed runs
+    assert calls2["n"] == 0
+    assert cache2.hits == 1 and cache2.misses == 0
     assert plan_to_dict(ex1.plan) == plan_to_dict(ex2.plan)
     assert ex1.time_spec.carry_write == ex2.time_spec.carry_write
 
